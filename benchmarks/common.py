@@ -1,0 +1,90 @@
+"""Shared benchmark harness.
+
+CPU-container sizing: the paper's datasets are 1M-36M objects on a GTX Titan
+X; here every dataset is a deterministic synthetic stand-in at ~20K objects
+and the engines run their pure-XLA paths (use_kernel=False -- interpret-mode
+Pallas would time the Python interpreter, not the algorithm).  Wall-times are
+therefore *relative* evidence (c-PQ vs SPQ vs sort orderings, scaling slopes);
+the absolute TPU numbers live in the dry-run roofline (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str = ""
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time in microseconds (blocks on jax outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def timeit_host(fn: Callable, *args, warmup: int = 0, iters: int = 3) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(rows: list[Row]) -> None:
+    for r in rows:
+        print(r.csv())
+        sys.stdout.flush()
+
+
+# ---------------------------------------------------------------------------
+# Shared synthetic datasets (built once, cached)
+# ---------------------------------------------------------------------------
+
+_CACHE: dict = {}
+
+
+def ann_dataset(n: int = 20_000, d: int = 32, m: int = 64, seed: int = 7):
+    """(points, labels, e2lsh params, signatures) -- SIFT-like stand-in."""
+    key = ("ann", n, d, m, seed)
+    if key not in _CACHE:
+        import jax.numpy as jnp
+
+        from repro.core.lsh import e2lsh
+        from repro.data.pipeline import synthetic_points
+
+        pts, labels = synthetic_points(n, d, n_clusters=64, seed=seed)
+        params = e2lsh.make(jax.random.PRNGKey(seed), d=d, m=m, w=4.0, n_buckets=67)
+        sigs = np.asarray(e2lsh.hash_points(params, jnp.asarray(pts)))
+        _CACHE[key] = (pts, labels, params, sigs)
+    return _CACHE[key]
+
+
+def query_sigs(params, pts, idxs, noise=0.1, seed=11):
+    import jax.numpy as jnp
+
+    from repro.core.lsh import e2lsh
+
+    rng = np.random.default_rng(seed)
+    q = pts[idxs] + rng.standard_normal((len(idxs), pts.shape[1])).astype(np.float32) * noise
+    return np.asarray(e2lsh.hash_points(params, jnp.asarray(q))), q

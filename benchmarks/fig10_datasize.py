@@ -1,0 +1,18 @@
+"""Paper Fig 10: running time vs data size (512 queries in the paper; 128
+here)."""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, ann_dataset, query_sigs, timeit
+from repro.core import GenieIndex
+
+
+def run() -> list[Row]:
+    rows = []
+    for n in (5_000, 10_000, 20_000):
+        pts, _, params, sigs = ann_dataset(n=n)
+        idx = GenieIndex.build_lsh(sigs, use_kernel=False)
+        qs, _ = query_sigs(params, pts, np.arange(128) % n)
+        us = timeit(lambda q=jnp.asarray(qs), i=idx: i.search(q, k=100).ids)
+        rows.append(Row(f"fig10.genie.n{n}", us, f"us_per_Mobj={us/n*1e6:.0f}"))
+    return rows

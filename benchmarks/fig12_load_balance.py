@@ -1,0 +1,36 @@
+"""Paper Fig 12: load balance by splitting long postings lists.
+
+The TPU analogue of GPU block imbalance is padding waste: the unsplit engine
+pads every scanned list to the global max length.  We index a skewed (Zipf)
+keyword distribution and compare the tiled postings scan with 4K sub-list
+splitting vs without."""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.core.postings import PostingsIndex
+
+
+def run() -> list[Row]:
+    rng = np.random.default_rng(5)
+    n, m, kw_space = 20_000, 8, 256
+    # Zipfian keywords: a few extremely long postings lists (paper's Adult case)
+    ranks = np.arange(1, kw_space + 1)
+    probs = 1.0 / ranks**1.2
+    probs /= probs.sum()
+    keywords = rng.choice(kw_space, size=(n, m), p=probs).astype(np.int32)
+    pidx = PostingsIndex.build(keywords, n_keywords=kw_space)
+    q = keywords[:16]
+    rows = []
+    for limit, tag in ((pidx.stats.max_list_len, "no_lb"), (4096, "lb4096"), (1024, "lb1024")):
+        tiles, tile_kw = pidx.split_tiles(limit=limit)
+        pad_ratio = tiles.size / max(pidx.stats.total_postings, 1)
+        us = timeit(
+            lambda t=jnp.asarray(tiles), tk=jnp.asarray(tile_kw): pidx.scan_counts_tiled(
+                t, tk, jnp.asarray(q)
+            )
+        )
+        rows.append(Row(f"fig12.{tag}", us,
+                        f"tiles={tiles.shape[0]};pad_ratio={pad_ratio:.2f};"
+                        f"max_list={pidx.stats.max_list_len}"))
+    return rows

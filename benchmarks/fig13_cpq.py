@@ -1,0 +1,37 @@
+"""Paper Fig 13 / Table IV: effectiveness of c-PQ -- selection time and
+per-query memory vs SPQ (bucket k-selection) and full sort."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, ann_dataset, timeit
+from repro.core import cpq, spq
+from repro.core.types import SearchParams
+
+
+def run() -> list[Row]:
+    _, _, _, sigs = ann_dataset()
+    n, m = sigs.shape
+    rng = np.random.default_rng(9)
+    rows = []
+    for nq in (64, 256):
+        counts = jnp.asarray(rng.binomial(m, 0.15, size=(nq, n)).astype(np.int32))
+        p = SearchParams(k=100, max_count=m)
+        f_cpq = jax.jit(lambda c: cpq.cpq_select(c, p).ids)
+        f_spq = jax.jit(lambda c: spq.spq_select(c, p).ids)
+        f_sort = jax.jit(lambda c: cpq.sort_select(c, p).ids)
+        t_cpq = timeit(f_cpq, counts)
+        t_spq = timeit(f_spq, counts)
+        t_sort = timeit(f_sort, counts)
+        rows.append(Row(f"fig13.cpq.q{nq}", t_cpq, f"vs_sort={t_sort/t_cpq:.2f}x"))
+        rows.append(Row(f"fig13.spq.q{nq}", t_spq, f"vs_sort={t_sort/t_spq:.2f}x"))
+        rows.append(Row(f"fig13.sort.q{nq}", t_sort, ""))
+    # Table IV: memory per query.  c-PQ: int8 counts (bounded domain) + Gate
+    # histogram + cap buffer.  SPQ/sort: fp32-copy working sets over all N.
+    p = SearchParams(k=100, max_count=m)
+    cpq_bytes = n * 1 + (m + 1) * 4 + p.cap() * 8
+    spq_bytes = n * 4 * 2  # value copy + bucket ids per iteration
+    rows.append(Row("table4.mem_per_query.cpq", 0.0, f"bytes={cpq_bytes}"))
+    rows.append(Row("table4.mem_per_query.spq", 0.0,
+                    f"bytes={spq_bytes};ratio={spq_bytes/cpq_bytes:.1f}x"))
+    return rows

@@ -1,0 +1,21 @@
+"""Paper Fig 14: ANN approximation ratio vs k (E2LSH on SIFT-like data)."""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, ann_dataset, query_sigs, timeit
+from repro.core import GenieIndex
+
+
+def run() -> list[Row]:
+    pts, _, params, sigs = ann_dataset(m=128)
+    idx = GenieIndex.build_lsh(sigs, use_kernel=False)
+    qs, qpts = query_sigs(params, pts, np.arange(64) % pts.shape[0], noise=0.3)
+    dists = np.linalg.norm(pts[None] - qpts[:, None], axis=-1)
+    rows = []
+    for k in (1, 10, 50, 100):
+        res = idx.search(jnp.asarray(qs), k=k)
+        got = np.sort(np.take_along_axis(dists, np.asarray(res.ids), axis=1), axis=1)
+        true = np.sort(dists, axis=1)[:, :k]
+        ratio = float(np.mean(got / np.maximum(true, 1e-9)))
+        rows.append(Row(f"fig14.approx_ratio.k{k}", 0.0, f"ratio={ratio:.3f}"))
+    return rows

@@ -1,0 +1,14 @@
+"""Paper Fig 8: minimum required LSH functions m vs similarity s."""
+from benchmarks.common import Row, timeit_host
+from repro.core.lsh import tau_ann
+
+
+def run() -> list[Row]:
+    us = timeit_host(lambda: tau_ann.min_m_for_similarity(0.5, 0.06, 0.06, m_max=1024), iters=1)
+    ss, ms = tau_ann.fig8_curve(0.06, 0.06, s_grid=21, m_max=1024)
+    peak_m, peak_s = int(ms.max()), float(ss[ms.argmax()])
+    return [
+        Row("fig8.min_m@s=0.5", us, f"m={tau_ann.min_m_for_similarity(0.5, 0.06, 0.06)}"),
+        Row("fig8.max_over_s", 0.0, f"m={peak_m}@s={peak_s:.2f};paper=237@0.5"),
+        Row("fig8.theorem41_bound", 0.0, f"m={tau_ann.m_theorem41(0.06, 0.06)}"),
+    ]

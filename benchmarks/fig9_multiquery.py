@@ -1,0 +1,42 @@
+"""Paper Fig 9/11: total running time for multiple queries -- GENIE (c-PQ)
+vs GEN-SPQ vs sort vs CPU-Idx (numpy postings scan)."""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, ann_dataset, query_sigs, timeit, timeit_host
+from repro.core import GenieIndex, TopKMethod
+from repro.core.postings import PostingsIndex
+
+
+def run() -> list[Row]:
+    pts, _, params, sigs = ann_dataset()
+    n, m = sigs.shape
+    idx = GenieIndex.build_lsh(sigs, use_kernel=False)
+    rows = []
+    for nq in (32, 128, 512):
+        qs, _ = query_sigs(params, pts, np.arange(nq) % pts.shape[0])
+        qs_j = jnp.asarray(qs)
+        for method in (TopKMethod.CPQ, TopKMethod.SPQ, TopKMethod.SORT):
+            us = timeit(lambda q=qs_j, mth=method: idx.search(q, k=100, method=mth).ids)
+            rows.append(Row(f"fig9.genie_{method.value}.q{nq}", us,
+                            f"N={n};m={m};per_query_us={us/nq:.1f}"))
+        # CPU-Idx baseline (paper competitor): postings scan + numpy partial sort
+        if nq <= 128:
+            keywords = sigs + (np.arange(m, dtype=np.int32) * 67)[None]
+            pidx = PostingsIndex.build(keywords, n_keywords=m * 67)
+            qkw = qs + (np.arange(m, dtype=np.int32) * 67)[None]
+
+            def cpu_idx(q=qkw):
+                counts = pidx.scan_counts_numpy(q)
+                return np.argpartition(-counts, 100, axis=1)[:, :100]
+
+            us = timeit_host(cpu_idx, iters=1)
+            rows.append(Row(f"fig9.cpu_idx.q{nq}", us, f"per_query_us={us/nq:.1f}"))
+    # Fig 11 analogue: one big batch vs split batches
+    qs, _ = query_sigs(params, pts, np.arange(1024) % pts.shape[0])
+    qs_j = jnp.asarray(qs)
+    us_big = timeit(lambda: idx.search(qs_j, k=100).ids)
+    us_split = timeit(lambda: [idx.search(qs_j[i * 256:(i + 1) * 256], k=100).ids for i in range(4)])
+    rows.append(Row("fig11.batch1024_single", us_big, ""))
+    rows.append(Row("fig11.batch1024_4x256", us_split, f"overhead={us_split/us_big:.2f}x"))
+    return rows

@@ -1,0 +1,62 @@
+"""Hillclimb measurement harness: lower ONE cell (small-depth, scan-unrolled)
+and report per-layer-unit collective/flops/bytes + full-cell memory.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch grok-1-314b --shape train_4k
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--full", action="store_true", help="also compile full depth for memory")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    from repro.launch import mesh as mesh_lib
+    from repro.launch import shapes as shapes_lib
+    from repro.launch.dryrun import (
+        _cost_dict, _layer_variants, _lower_lm, _mem_dict, collective_bytes,
+    )
+    from repro.models.registry import get_config
+
+    cfg = get_config(args.arch)
+    mesh = mesh_lib.make_production_mesh(multi_pod=(args.mesh == "multi"))
+    shape = shapes_lib.SHAPES[args.shape]
+
+    cfg1, cfg2, units = _layer_variants(cfg)
+    _, c1 = _lower_lm(cfg1, shape, mesh)
+    r1 = dict(cost=_cost_dict(c1.cost_analysis()), coll=collective_bytes(c1.as_text()))
+    _, c2 = _lower_lm(cfg2, shape, mesh)
+    r2 = dict(cost=_cost_dict(c2.cost_analysis()), coll=collective_bytes(c2.as_text()))
+
+    per_layer_coll = {k: (r2["coll"].get(k, 0) - r1["coll"].get(k, 0))
+                      for k in set(r1["coll"]) | set(r2["coll"])}
+    per_layer_flops = r2["cost"]["flops"] - r1["cost"]["flops"]
+    per_layer_bytes = r2["cost"]["bytes_accessed"] - r1["cost"]["bytes_accessed"]
+    total_coll = {k: r1["coll"].get(k, 0) + (units - 1) * v for k, v in per_layer_coll.items()}
+
+    out = dict(
+        tag=args.tag, arch=args.arch, shape=args.shape, mesh=args.mesh, units=units,
+        per_layer=dict(flops=per_layer_flops, bytes=per_layer_bytes,
+                       collectives_gb={k: round(v / 1e9, 3) for k, v in per_layer_coll.items()}),
+        total_collectives_gb={k: round(v / 1e9, 2) for k, v in total_coll.items()},
+        total_flops=r1["cost"]["flops"] + (units - 1) * per_layer_flops,
+        total_bytes=r1["cost"]["bytes_accessed"] + (units - 1) * per_layer_bytes,
+    )
+    if args.full:
+        _, cf = _lower_lm(cfg, shape, mesh)
+        out["memory"] = _mem_dict(cf.memory_analysis())
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Roofline analysis (deliverable g): three-term model per (arch x shape x
+mesh) cell from the dry-run's compiled artifacts.
+
+    compute term    = HLO_FLOPs / peak_FLOPs            (per chip, bf16)
+    memory term     = HLO_bytes / HBM_bw                (per chip)
+    collective term = collective_bytes / ICI_link_bw    (per chip)
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link
+ICI (per-chip aggregate used as-is; a 2D-torus chip has more links, so this
+is conservative).  HLO_FLOPs/bytes come from the scan-unrolled small-depth
+extrapolation (see launch/dryrun.py) because XLA's cost analysis counts a
+while-loop body once.  The dominant term approximates the step time on real
+hardware assuming perfect overlap of the other two.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link, per chip
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports", "dryrun")
+
+
+def load_cells(pattern: str = "*") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(REPORT_DIR, f"{pattern}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def analyse(cell: dict, chips: int) -> dict | None:
+    """Three roofline terms (seconds, per step) for one dry-run cell."""
+    if not cell.get("ok") or cell.get("skipped"):
+        return None
+    ex = cell.get("extrapolated") or {}
+    cost = ex.get("cost") or cell.get("cost") or {}
+    coll = ex.get("collectives") or cell.get("collectives") or {}
+    flops = cost.get("flops", 0.0)
+    bytes_acc = cost.get("bytes_accessed", 0.0)
+    coll_bytes = float(sum(coll.values()))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_collective = coll_bytes / ICI_BW
+    terms = dict(compute=t_compute, memory=t_memory, collective=t_collective)
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    model_flops = cell.get("model_flops", 0.0)
+    hlo_global = flops * chips
+    out = dict(
+        name=cell.get("name"), shape=cell.get("shape"), mesh=cell.get("mesh"),
+        kind=cell.get("kind"),
+        t_compute=t_compute, t_memory=t_memory, t_collective=t_collective,
+        dominant=dominant, step_seconds_lb=bound,
+        model_flops=model_flops, hlo_flops_global=hlo_global,
+        useful_ratio=(model_flops / hlo_global) if hlo_global else 0.0,
+        # roofline fraction: useful model FLOPs vs what the chips could do in
+        # the bound time (the score axis)
+        roofline_fraction=(model_flops / (chips * PEAK_FLOPS * bound)) if bound else 0.0,
+        mem_gb_per_dev=(cell.get("memory", {}).get("temp_size_in_bytes", 0)
+                        + cell.get("memory", {}).get("argument_size_in_bytes", 0)) / 1e9,
+        fits_16gb=(cell.get("memory", {}).get("temp_size_in_bytes", 0)
+                   + cell.get("memory", {}).get("argument_size_in_bytes", 0)) < 16e9,
+        collectives=coll,
+    )
+    return out
+
+
+def table(mesh: str = "single") -> list[dict]:
+    chips = 256 if mesh == "single" else 512
+    rows = []
+    for cell in load_cells():
+        if cell.get("mesh") != mesh:
+            continue
+        r = analyse(cell, chips)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'cell':42s} {'comp(ms)':>9s} {'mem(ms)':>9s} {'coll(ms)':>9s} "
+           f"{'dominant':>10s} {'MFU-frac':>9s} {'useful':>7s} {'GB/dev':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r["kind"], r["name"], r["shape"])):
+        lines.append(
+            f"{r['kind']+':'+r['name']+':'+r['shape']:42s} "
+            f"{r['t_compute']*1e3:9.2f} {r['t_memory']*1e3:9.2f} "
+            f"{r['t_collective']*1e3:9.2f} {r['dominant']:>10s} "
+            f"{r['roofline_fraction']:9.3f} {r['useful_ratio']:7.2f} "
+            f"{r['mem_gb_per_dev']:7.2f}"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    for mesh in ("single", "multi"):
+        rows = table(mesh)
+        if rows:
+            print(f"\n=== Roofline ({mesh} mesh, {256 if mesh=='single' else 512} chips) ===")
+            print(format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

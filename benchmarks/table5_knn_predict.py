@@ -1,0 +1,35 @@
+"""Paper Table V: 1NN label prediction via RBH (Laplacian-kernel) ANN --
+precision / recall / F1 / accuracy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.core import GenieIndex
+from repro.core.lsh import rbh
+from repro.data.pipeline import synthetic_points
+
+
+def run() -> list[Row]:
+    d, m = 32, 128
+    pts, labels = synthetic_points(8_000, d, n_clusters=26, seed=13)
+    sigma = rbh.median_heuristic_sigma(jnp.asarray(pts), jax.random.PRNGKey(0))
+    params = rbh.make(jax.random.PRNGKey(1), d=d, m=m, sigma=sigma, n_buckets=8192)
+    train, test = pts[1000:], pts[:1000]
+    ltrain, ltest = labels[1000:], labels[:1000]
+    idx = GenieIndex.build_lsh(rbh.hash_points(params, jnp.asarray(train)),
+                               max_count=m, use_kernel=False)
+    tsig = rbh.hash_points(params, jnp.asarray(test))
+    us = timeit(lambda: idx.search(tsig, k=1).ids)
+    pred = ltrain[np.asarray(idx.search(tsig, k=1).ids)[:, 0]]
+    acc = float(np.mean(pred == ltest))
+    # macro precision/recall/F1
+    ps, rs = [], []
+    for c in np.unique(ltest):
+        tp = np.sum((pred == c) & (ltest == c))
+        ps.append(tp / max(np.sum(pred == c), 1))
+        rs.append(tp / max(np.sum(ltest == c), 1))
+    p, r = float(np.mean(ps)), float(np.mean(rs))
+    f1 = 2 * p * r / max(p + r, 1e-9)
+    return [Row("table5.rbh_1nn", us,
+                f"precision={p:.3f};recall={r:.3f};f1={f1:.3f};accuracy={acc:.3f}")]

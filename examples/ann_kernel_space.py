@@ -1,0 +1,41 @@
+"""ANN search in Laplacian kernel space via Random Binning Hashing (paper
+section IV-A3, the OCR experiment): kernel-width heuristic, RBH signatures,
+re-hashing to a finite bucket space, and 1NN label prediction.
+
+    PYTHONPATH=src python examples/ann_kernel_space.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GenieIndex
+from repro.core.lsh import rbh
+from repro.data.pipeline import synthetic_points
+
+
+def main():
+    d, m = 32, 128
+    pts, labels = synthetic_points(10_000, d, n_clusters=26, seed=4)
+
+    sigma = rbh.median_heuristic_sigma(jnp.asarray(pts), jax.random.PRNGKey(0))
+    print(f"kernel width sigma = {sigma:.2f} (mean pairwise l1, Jaakkola heuristic)")
+    params = rbh.make(jax.random.PRNGKey(1), d=d, m=m, sigma=sigma, n_buckets=8192)
+
+    train, test = pts[1000:], pts[:1000]
+    ltrain, ltest = labels[1000:], labels[:1000]
+    index = GenieIndex.build_lsh(rbh.hash_points(params, jnp.asarray(train)),
+                                 max_count=m, use_kernel=False)
+    res = index.search(rbh.hash_points(params, jnp.asarray(test)), k=1)
+    pred = ltrain[np.asarray(res.ids)[:, 0]]
+    print(f"1NN label prediction accuracy: {float(np.mean(pred == ltest)):.3f} "
+          f"(paper Table V: 0.837 on real OCR)")
+
+    # collision probability sanity: empirical vs Laplacian kernel
+    x, y = jnp.asarray(train[0]), jnp.asarray(train[0]) + 0.05
+    emp = float(jnp.mean((rbh.hash_points(params, x) == rbh.hash_points(params, y)).astype(jnp.float32)))
+    theo = float(rbh.kernel(x, y, sigma))
+    print(f"collision prob: empirical {emp:.3f} vs kernel {theo:.3f}")
+
+
+if __name__ == "__main__":
+    main()

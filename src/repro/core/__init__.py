@@ -1,0 +1,6 @@
+# The paper's primary contribution: GENIE generic inverted-index similarity
+# search (match-count model, c-PQ selection, LSH/SA transforms, distributed
+# merge).  See DESIGN.md for the GPU->TPU adaptation map.
+from repro.core import cpq, distributed, index, match, merge, multiload, postings, spq  # noqa: F401
+from repro.core.index import GenieIndex  # noqa: F401
+from repro.core.types import Engine, SearchParams, TopKMethod, TopKResult  # noqa: F401

@@ -1,0 +1,142 @@
+"""c-PQ: Count Priority Queue (paper section III-C), TPU-native formulation.
+
+The paper's c-PQ keeps a dense low-bit Bitmap Counter for every object, a Gate
+(ZipperArray ZA + AuditThreshold AT) fed by atomic updates, and a small Hash
+Table holding only objects whose count passed AT.  Theorem 3.1: when the scan
+finishes, ZA[AT] < k <= ZA[AT-1], the k-th match count MC_k == AT - 1, and the
+top-k candidates all sit in the Hash Table (|HT| = O(k * AT)).
+
+TPU adaptation (DESIGN.md section 2): counts live in a bounded domain
+[0, max_count], so the Gate state is reconstructed *exactly* from a count
+histogram -- ZA[t] == #(count_n >= t) == suffix-sum of the histogram --
+without any atomics:
+
+  phase 1 (histogram):  hist[q, t] = #(counts[q, n] == t)   (Pallas kernel)
+  phase 2 (gate):       AT = min(t >= 1 : ZA[t] < k);  threshold = AT - 1
+  phase 3 (hash table): masked two-class compaction (strict > threshold first,
+                        then ties == threshold) into a fixed buffer of size cap
+                        -- the Hash-Table analogue; a single scan, no sort of N.
+
+Only the final cap-sized buffer (cap ~ 2k << N) is ordered, reproducing the
+paper's "scan the small HT once" property.  Exactness versus a full sort is
+property-tested in tests/test_cpq.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import SearchParams, TopKResult
+
+
+def count_histogram(counts: jnp.ndarray, max_count: int, bin_chunk: int = 8) -> jnp.ndarray:
+    """hist[q, t] = #{n : counts[q, n] == t},  t in [0, max_count].
+
+    lax.scan over bin chunks keeps the one-hot temp at [Q, N, bin_chunk]
+    (a full [Q, N, max_count+1] one-hot is ~17 GB/device for the paper-scale
+    SIFT cell; the Pallas kernel streams N tiles instead)."""
+    nbins = max_count + 1
+    c = counts.astype(jnp.int32)
+    n_chunks = -(-nbins // bin_chunk)
+
+    def step(_, start):
+        bins = start + jnp.arange(bin_chunk, dtype=jnp.int32)
+        part = jnp.sum((c[..., None] == bins).astype(jnp.int8), axis=1)
+        return None, part.astype(jnp.int32)                  # [Q, bin_chunk]
+
+    _, parts = jax.lax.scan(
+        step, None, jnp.arange(n_chunks, dtype=jnp.int32) * bin_chunk
+    )
+    hist = jnp.moveaxis(parts, 0, 1).reshape(c.shape[0], n_chunks * bin_chunk)
+    return hist[:, :nbins]
+
+
+def zipper_array(hist: jnp.ndarray) -> jnp.ndarray:
+    """ZA[q, t] = #{n : count >= t} (suffix sum of hist over the count axis)."""
+    rev = jnp.flip(hist, axis=-1)
+    return jnp.flip(jnp.cumsum(rev, axis=-1), axis=-1)
+
+
+def audit_threshold(hist: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Gate: AT[q] = min{t >= 1 : ZA[t] < k} (== max_count+1 when none).
+
+    Returns (at, threshold) with threshold = AT - 1 == MC_k (Theorem 3.1).
+    """
+    za = zipper_array(hist)                      # [Q, max_count+1]
+    max_count = hist.shape[-1] - 1
+    below = za[:, 1:] < k                        # t = 1 .. max_count
+    any_below = jnp.any(below, axis=-1)
+    first = jnp.argmax(below, axis=-1) + 1       # first t with ZA[t] < k
+    at = jnp.where(any_below, first, max_count + 1).astype(jnp.int32)
+    return at, at - 1
+
+
+def _compact_candidates(
+    counts: jnp.ndarray, threshold: jnp.ndarray, cap: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Two-class masked compaction into a cap-sized buffer per query.
+
+    Objects with count > threshold ("strict", provably < k of them by the Gate)
+    are written first; ties (== threshold) fill the remaining slots in id order
+    (the paper breaks ties randomly).  Returns (ids [Q, cap], vals [Q, cap]),
+    empty slots marked id=-1, val=-1.
+    """
+    q, n = counts.shape
+    c = counts.astype(jnp.int32)
+    thr = threshold[:, None]
+    strict = c > thr
+    tie = c == thr
+    n_strict = jnp.sum(strict.astype(jnp.int32), axis=-1, keepdims=True)
+    pos_strict = jnp.cumsum(strict.astype(jnp.int32), axis=-1) - 1
+    pos_tie = n_strict + jnp.cumsum(tie.astype(jnp.int32), axis=-1) - 1
+    pos = jnp.where(strict, pos_strict, jnp.where(tie, pos_tie, cap))
+    pos = jnp.minimum(pos, cap)                  # cap slot == drop
+    ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (q, n))
+    out_ids = jnp.full((q, cap + 1), -1, dtype=jnp.int32)
+    out_vals = jnp.full((q, cap + 1), -1, dtype=jnp.int32)
+    out_ids = jax.vmap(lambda o, p, v: o.at[p].set(v, mode="drop"))(out_ids, pos, ids)
+    out_vals = jax.vmap(lambda o, p, v: o.at[p].set(v, mode="drop"))(out_vals, pos, c)
+    return out_ids[:, :cap], out_vals[:, :cap]
+
+
+def topk_from_candidates(ids: jnp.ndarray, vals: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Order a small candidate buffer by (count desc, id asc) and take k.
+
+    This is the "scan the Hash Table once" step: the buffer is tiny (cap or a
+    merge of per-shard caps), so the sort cost is O(cap log cap) independent
+    of N.
+    """
+    vals = vals.astype(jnp.int32)
+    # Stable argsort on -vals keeps id-ascending order within equal counts
+    # (buffers are filled in id order).
+    order = jnp.argsort(-vals, axis=-1, stable=True)
+    top = order[..., :k]
+    return (
+        jnp.take_along_axis(ids, top, axis=-1),
+        jnp.take_along_axis(vals, top, axis=-1),
+    )
+
+
+def cpq_select(
+    counts: jnp.ndarray,
+    params: SearchParams,
+    hist: jnp.ndarray | None = None,
+) -> TopKResult:
+    """Exact top-k by match count via the c-PQ gate.  counts: int [Q, N].
+
+    `hist` may be supplied by the fused Pallas kernel (kernels/cpq_hist); when
+    None it is computed with the pure-jnp reference.
+    """
+    if hist is None:
+        hist = count_histogram(counts, params.max_count)
+    _, threshold = audit_threshold(hist, params.k)
+    cap = params.cap()
+    cand_ids, cand_vals = _compact_candidates(counts, threshold, cap)
+    ids, vals = topk_from_candidates(cand_ids, cand_vals, params.k)
+    return TopKResult(ids=ids, counts=vals, threshold=threshold)
+
+
+def sort_select(counts: jnp.ndarray, params: SearchParams) -> TopKResult:
+    """Baseline: full sort-based top-k (lax.top_k over all N)."""
+    vals, ids = jax.lax.top_k(counts.astype(jnp.int32), params.k)
+    return TopKResult(ids=ids.astype(jnp.int32), counts=vals, threshold=vals[:, -1])

@@ -1,0 +1,1 @@
+from repro.core.lsh import e2lsh, minhash, rbh, rehash, simhash, tau_ann  # noqa: F401

@@ -1,0 +1,72 @@
+"""Re-hashing mechanism r(.) of GENIE (paper section IV-A2, Fig 7).
+
+LSH signatures can live in a huge (even unbounded) space -- e.g. Random Binning
+Hashing emits one integer grid coordinate per input dimension.  GENIE re-hashes
+each signature into a small domain [0, D) with a random projection function
+r(.).  The paper uses MurmurHash3; we implement the Murmur3 32-bit finalizer
+(fmix32) plus seed mixing in pure JAX uint32 arithmetic so the whole transform
+runs on device and is deterministic across hosts.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_C1 = jnp.uint32(0x85EBCA6B)
+_C2 = jnp.uint32(0xC2B2AE35)
+_GOLDEN = jnp.uint32(0x9E3779B9)
+
+
+def fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """MurmurHash3 32-bit finalizer: a bijective avalanche mix on uint32."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _C1
+    x = x ^ (x >> 13)
+    x = x * _C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_combine(acc: jnp.ndarray, value: jnp.ndarray) -> jnp.ndarray:
+    """Combine a hash accumulator with a new value (boost-style)."""
+    acc = acc.astype(jnp.uint32)
+    value = fmix32(value.astype(jnp.uint32))
+    return acc ^ (value + _GOLDEN + (acc << 6) + (acc >> 2))
+
+
+def rehash(signature: jnp.ndarray, seed: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    """r_i(h_i(p)): project integer signatures into [0, n_buckets).
+
+    signature: int array [..., m]  -- one signature per hash function.
+    seed:      uint32 [m]          -- independent seed per function (makes the
+                                      m projections r_1..r_m independent).
+    returns int32 [..., m] in [0, n_buckets).
+    """
+    mixed = fmix32(signature.astype(jnp.uint32) ^ seed.astype(jnp.uint32))
+    return (mixed % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+def rehash_vector(signature_vec: jnp.ndarray, seeds: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    """Re-hash a *vector-valued* signature (e.g. RBH's per-dimension grid cell
+    vector) into a single bucket id in [0, n_buckets).
+
+    signature_vec: int [..., d]   -- d-dimensional signature of ONE hash function.
+    seeds:         uint32 [d]     -- per-coordinate seeds.
+    returns int32 [...] in [0, n_buckets).
+    """
+    acc = jnp.zeros(signature_vec.shape[:-1], dtype=jnp.uint32)
+    # Fold coordinates with an order-sensitive combine (vectorised via scan-free
+    # reduction: combine(acc, x_d) sequentially over the last axis).
+    d = signature_vec.shape[-1]
+    for i in range(d):  # d is static and small (data dimensionality)
+        acc = hash_combine(acc, signature_vec[..., i].astype(jnp.uint32) ^ seeds[i])
+    return (fmix32(acc) % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+def make_seeds(key, m: int) -> jnp.ndarray:
+    """Draw m independent uint32 seeds from a JAX PRNG key."""
+    import jax
+
+    return jax.random.randint(key, (m,), minval=0, maxval=2**31 - 1, dtype=jnp.int32).astype(
+        jnp.uint32
+    )

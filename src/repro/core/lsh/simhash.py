@@ -1,0 +1,41 @@
+"""SimHash (signed random projection) LSH for angular / cosine similarity.
+
+Charikar (paper ref [5]): h_v(p) = sign(v . p) with v ~ N(0, I) satisfies
+
+    Pr[h(p) = h(q)] = 1 - theta(p, q) / pi
+
+which is a valid GENIE LSH family (Eqn 1) under the angular similarity
+sim(p,q) = 1 - theta/pi.  Signatures are single bits, so the match-count
+domain is exactly m and no re-hashing is needed (D = 2; the 1/D re-hash
+collision term of Theorem 4.1 does not apply because r is the identity).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SimHashParams:
+    v: jnp.ndarray  # [m, d]
+
+
+def make(key, d: int, m: int) -> SimHashParams:
+    return SimHashParams(v=jax.random.normal(key, (m, d), dtype=jnp.float32))
+
+
+def hash_points(params: SimHashParams, x: jnp.ndarray) -> jnp.ndarray:
+    proj = jnp.einsum("...d,md->...m", x.astype(jnp.float32), params.v)
+    return (proj >= 0).astype(jnp.int32)
+
+
+def similarity(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Angular similarity 1 - theta/pi."""
+    xn = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+    yn = y / jnp.maximum(jnp.linalg.norm(y, axis=-1, keepdims=True), 1e-12)
+    cos = jnp.clip(jnp.sum(xn * yn, axis=-1), -1.0, 1.0)
+    return 1.0 - jnp.arccos(cos) / math.pi

@@ -1,0 +1,132 @@
+"""Match-count engines (paper Definition 2.1), TPU-native dense formulations.
+
+Each engine computes counts[q, n] = MC(Q_q, O_n) for a query batch against all
+objects.  Pure-jnp implementations here double as the oracles for the Pallas
+kernels in repro.kernels (ops.py wrappers dispatch to the kernels; these
+functions are the reference semantics and the small-scale fallback).
+
+Memory note: counts are bounded by max_count (m hash functions / #attributes /
+#grams) -- the paper's Bitmap-Counter observation (section III-C) -- so an int8
+output is lossless whenever max_count <= 127; `as_count_dtype` applies it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def as_count_dtype(counts: jnp.ndarray, max_count: int) -> jnp.ndarray:
+    """Bitmap-Counter bit-bounding: store counts in the narrowest safe dtype."""
+    if max_count <= 127:
+        return counts.astype(jnp.int8)
+    if max_count <= 32767:
+        return counts.astype(jnp.int16)
+    return counts.astype(jnp.int32)
+
+
+def _pad_axis1(x: jnp.ndarray, chunk: int, value) -> jnp.ndarray:
+    m = x.shape[1]
+    target = -(-m // chunk) * chunk
+    if target == m:
+        return x
+    return jnp.pad(x, ((0, 0), (0, target - m)), constant_values=value)
+
+
+def _scan_chunks(d: jnp.ndarray, s: jnp.ndarray, chunk: int, combine) -> jnp.ndarray:
+    """counts[q, n] = sum over chunks of combine(d_chunk [N,c], s_chunk [Q,c]).
+
+    A lax.scan over the reduced axis keeps live temps at [Q, N, chunk]
+    regardless of m and the HLO compact (padding must be combine-neutral)."""
+    q, n = s.shape[0], d.shape[0]
+    dc = jnp.moveaxis(d.reshape(n, -1, chunk), 1, 0)    # [nc, N, c]
+    sc = jnp.moveaxis(s.reshape(q, -1, chunk), 1, 0)    # [nc, Q, c]
+
+    def step(acc, xs):
+        dcc, scc = xs
+        return acc + combine(dcc, scc), None
+
+    acc, _ = jax.lax.scan(step, jnp.zeros((q, n), jnp.int32), (dc, sc))
+    return acc
+
+
+def match_eq(data_sigs: jnp.ndarray, query_sigs: jnp.ndarray, chunk: int = 8) -> jnp.ndarray:
+    """EQ engine: counts[q, n] = sum_i (data_sigs[n, i] == query_sigs[q, i]).
+
+    data_sigs:  int [N, m], query_sigs: int [Q, m] -> int32 [Q, N].
+    Input dtype is preserved (int8 signatures when the rehash domain fits --
+    4x less HBM traffic for the dominant stream; EXPERIMENTS.md hillclimb C).
+    """
+    d = _pad_axis1(data_sigs, chunk, -1)
+    s = _pad_axis1(query_sigs, chunk, -2)
+
+    def combine(dcc, scc):
+        hit = scc[:, None, :] == dcc[None, :, :]
+        return jnp.sum(hit.astype(jnp.int8), axis=-1).astype(jnp.int32)
+
+    return _scan_chunks(d, s, chunk, combine)
+
+
+def match_range(
+    data_vals: jnp.ndarray, q_lo: jnp.ndarray, q_hi: jnp.ndarray, chunk: int = 8
+) -> jnp.ndarray:
+    """RANGE engine: counts[q, n] = sum_d (q_lo[q,d] <= data_vals[n,d] <= q_hi[q,d]).
+
+    Implements the relational-table match count (paper Example 2.1 / section V-C)
+    directly on discretized attribute values -- the inverted index over
+    (attribute, value) keywords is semantically this predicate count.
+    """
+    x = _pad_axis1(data_vals.astype(jnp.int32), chunk, 0)
+    lohi = jnp.stack(
+        [_pad_axis1(q_lo.astype(jnp.int32), chunk, 1),
+         _pad_axis1(q_hi.astype(jnp.int32), chunk, 0)], axis=-1
+    ).reshape(q_lo.shape[0], -1)  # interleave lo/hi so _scan_chunks sees one array
+
+    def combine(dcc, scc):
+        c = dcc.shape[-1]
+        lo = scc[:, 0::2][:, :c]
+        hi = scc[:, 1::2][:, :c]
+        hit = (dcc[None, :, :] >= lo[:, None, :]) & (dcc[None, :, :] <= hi[:, None, :])
+        return jnp.sum(hit.astype(jnp.int8), axis=-1).astype(jnp.int32)
+
+    # lo/hi interleaved doubles the chunk on the query side
+    q, n = q_lo.shape[0], x.shape[0]
+    dc = jnp.moveaxis(x.reshape(n, -1, chunk), 1, 0)
+    sc = jnp.moveaxis(lohi.reshape(q, -1, 2 * chunk), 1, 0)
+
+    def step(acc, xs):
+        dcc, scc = xs
+        return acc + combine(dcc, scc), None
+
+    acc, _ = jax.lax.scan(step, jnp.zeros((q, n), jnp.int32), (dc, sc))
+    return acc
+
+
+def match_minsum(data_cnt: jnp.ndarray, query_cnt: jnp.ndarray, chunk: int = 8) -> jnp.ndarray:
+    """MINSUM engine: counts[q, n] = sum_v min(data_cnt[n,v], query_cnt[q,v]).
+
+    Exactly Lemma 5.1's ordered-n-gram match count when the count vectors are
+    per-gram-type multiplicities (bucketised count vectors give an upper bound;
+    see sa/ngram.py).
+    """
+    d = _pad_axis1(data_cnt.astype(jnp.int32), chunk, 0)
+    s = _pad_axis1(query_cnt.astype(jnp.int32), chunk, 0)
+
+    def combine(dcc, scc):
+        return jnp.sum(jnp.minimum(scc[:, None, :], dcc[None, :, :]), axis=-1)
+
+    return _scan_chunks(d, s, chunk, combine)
+
+
+def match_ip(data_bin: jnp.ndarray, query_bin: jnp.ndarray) -> jnp.ndarray:
+    """IP engine: counts = query_bin @ data_bin^T (binary vectors; MXU matmul).
+
+    The short-document model of section V-B: MC == inner product of binary
+    word vectors.
+    """
+    acc = jnp.einsum(
+        "qv,nv->qn",
+        query_bin.astype(jnp.float32),
+        data_bin.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return jnp.round(acc).astype(jnp.int32)

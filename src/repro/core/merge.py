@@ -1,0 +1,68 @@
+"""Hierarchical top-k merge (paper section III-D's host merge, generalised).
+
+The paper's multiple-loading strategy searches index parts independently and
+merges per-part top-k results on the CPU.  At pod scale the same reduction
+becomes a collective: every shard produces a cap-sized candidate buffer
+(c-PQ Hash Table) and buffers are merged pairwise/hierarchically -- the merge
+of two valid top-k buffers is a valid top-k buffer of the union (counts are
+per-object totals when objects are *partitioned* across shards, so no
+cross-shard count summation is needed).
+
+merge_topk    -- host/XLA merge of stacked per-part results.
+tree_merge    -- log2(S) pairwise merge (the collective-friendly schedule).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import cpq as _cpq
+from repro.core.types import TopKResult
+
+
+def _offset_ids(ids: jnp.ndarray, part_sizes, axis_index=None) -> jnp.ndarray:
+    """Translate part-local object ids to global ids given per-part offsets."""
+    import numpy as np
+
+    offsets = np.concatenate([[0], np.cumsum(part_sizes)[:-1]]).astype(np.int32)
+    off = jnp.asarray(offsets)[:, None, None]
+    return jnp.where(ids >= 0, ids + off, ids)
+
+
+def merge_topk(ids: jnp.ndarray, counts: jnp.ndarray, k: int) -> TopKResult:
+    """Merge per-part results.  ids/counts: int32 [S, Q, kp] (part-LOCAL top-k,
+    ids already globalised) -> overall top-k [Q, k]."""
+    s, q, kp = ids.shape
+    flat_ids = jnp.transpose(ids, (1, 0, 2)).reshape(q, s * kp)
+    flat_counts = jnp.transpose(counts, (1, 0, 2)).reshape(q, s * kp)
+    out_ids, out_counts = _cpq.topk_from_candidates(flat_ids, flat_counts, k)
+    return TopKResult(ids=out_ids, counts=out_counts, threshold=out_counts[:, -1])
+
+
+def merge_two(
+    ids_a: jnp.ndarray, counts_a: jnp.ndarray, ids_b: jnp.ndarray, counts_b: jnp.ndarray, k: int
+):
+    """Pairwise merge of two [Q, k] buffers -> [Q, k]."""
+    ids = jnp.concatenate([ids_a, ids_b], axis=-1)
+    counts = jnp.concatenate([counts_a, counts_b], axis=-1)
+    return _cpq.topk_from_candidates(ids, counts, k)
+
+
+def tree_merge(ids: jnp.ndarray, counts: jnp.ndarray, k: int):
+    """log2(S) pairwise merge of [S, Q, kp] buffers (ids globalised).
+
+    Mirrors the recursive-doubling schedule a pod-level collective merge uses;
+    produces identical results to merge_topk (tested).
+    """
+    s = ids.shape[0]
+    while s > 1:
+        half = (s + 1) // 2
+        a_ids, a_cnt = ids[:half], counts[:half]
+        b_ids = jnp.concatenate([ids[half:], jnp.full_like(ids[: 2 * half - s], -1)], axis=0)
+        b_cnt = jnp.concatenate(
+            [counts[half:], jnp.full_like(counts[: 2 * half - s], -1)], axis=0
+        )
+        merged_ids, merged_cnt = merge_two(a_ids, a_cnt, b_ids, b_cnt, min(k, a_ids.shape[-1] + b_ids.shape[-1]))
+        ids, counts = merged_ids, merged_cnt
+        s = half
+    out_ids, out_counts = _cpq.topk_from_candidates(ids[0], counts[0], k)
+    return TopKResult(ids=out_ids, counts=out_counts, threshold=out_counts[:, -1])

@@ -1,0 +1,118 @@
+"""Postings-list (CSR) inverted-index engine + load balancing (paper III-B).
+
+This is the GPU-faithful engine: an explicit inverted index with one postings
+list per keyword, kept for (a) the CPU-Idx baseline of the paper's
+experiments and (b) the load-balance study (Fig 4 / Fig 12): long postings
+lists are split into fixed-size sub-lists ("one block takes at most two 4K
+sub-lists"); on TPU the analogous effect is padding waste -- an unsplit engine
+pads every scanned list to the global maximum length, a split engine works on
+uniform tiles.
+
+The TPU-native hot path is the dense engine in core/match.py; this module is
+correctness-checked against it (same match counts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import IndexStats
+
+
+@dataclasses.dataclass
+class PostingsIndex:
+    """CSR inverted index over keyword ids in [0, n_keywords)."""
+
+    n_objects: int
+    n_keywords: int
+    indptr: np.ndarray      # [n_keywords + 1]
+    indices: np.ndarray     # [total_postings]  object ids, list-major
+    stats: IndexStats
+
+    @classmethod
+    def build(cls, keywords: np.ndarray, n_keywords: int) -> "PostingsIndex":
+        """keywords: int [N, m] -- m keyword ids per object (LSH signatures
+        offset by function index, n-gram bucket ids, (attr, value) codes...)."""
+        t0 = time.time()
+        n, m = keywords.shape
+        flat = keywords.astype(np.int64).ravel()
+        obj = np.repeat(np.arange(n, dtype=np.int32), m)
+        order = np.argsort(flat, kind="stable")
+        flat_sorted = flat[order]
+        indices = obj[order]
+        counts = np.bincount(flat_sorted, minlength=n_keywords)
+        indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        stats = IndexStats(
+            n_objects=n,
+            n_lists=int(np.sum(counts > 0)),
+            total_postings=int(flat.size),
+            max_list_len=int(counts.max()) if counts.size else 0,
+            bytes_device=int(indices.nbytes + indptr.nbytes),
+            build_seconds=time.time() - t0,
+        )
+        return cls(n_objects=n, n_keywords=n_keywords, indptr=indptr, indices=indices, stats=stats)
+
+    # ------------------------------------------------------------------
+    # CPU-Idx baseline (paper competitor): pure numpy postings scan.
+    # ------------------------------------------------------------------
+    def scan_counts_numpy(self, query_keywords: np.ndarray) -> np.ndarray:
+        """counts [Q, N]: scan the matched postings lists per query."""
+        q, m = query_keywords.shape
+        out = np.zeros((q, self.n_objects), dtype=np.int32)
+        for qi in range(q):
+            for kw in query_keywords[qi]:
+                s, e = self.indptr[kw], self.indptr[kw + 1]
+                np.add.at(out[qi], self.indices[s:e], 1)
+        return out
+
+    # ------------------------------------------------------------------
+    # Tiled device engine with the paper's sub-list splitting.
+    # ------------------------------------------------------------------
+    def split_tiles(self, limit: int = 4096) -> tuple[np.ndarray, np.ndarray]:
+        """Split postings lists into <=limit-sized sub-lists (paper Fig 4).
+
+        Returns (tiles [T, limit] int32, object ids padded with -1;
+                 tile_keyword [T] int32, owning keyword of each tile).
+        When limit >= max_list_len this degenerates to one padded tile per
+        list -- the "no load balance" configuration whose padding waste is the
+        TPU analogue of GPU block imbalance.
+        """
+        tiles, tile_kw = [], []
+        for kw in range(self.n_keywords):
+            s, e = int(self.indptr[kw]), int(self.indptr[kw + 1])
+            if s == e:
+                continue
+            seg = self.indices[s:e]
+            for off in range(0, len(seg), limit):
+                sub = seg[off : off + limit]
+                pad = np.full(limit, -1, dtype=np.int32)
+                pad[: len(sub)] = sub
+                tiles.append(pad)
+                tile_kw.append(kw)
+        if not tiles:
+            return np.zeros((0, limit), np.int32), np.zeros((0,), np.int32)
+        return np.stack(tiles), np.asarray(tile_kw, dtype=np.int32)
+
+    def scan_counts_tiled(
+        self, tiles: jnp.ndarray, tile_kw: jnp.ndarray, query_keywords: jnp.ndarray
+    ) -> jnp.ndarray:
+        """JAX tiled postings scan: counts [Q, N] by scatter-add over active tiles.
+
+        A tile is active for a query iff its keyword is among the query's m
+        keywords; every active tile contributes +1 for each object id it holds.
+        """
+        n = self.n_objects
+
+        def one_query(qkw):
+            active = jnp.any(tile_kw[:, None] == qkw[None, :], axis=-1)  # [T]
+            w = jnp.where(tiles >= 0, active[:, None], False)           # [T, L]
+            flat_ids = jnp.where(tiles >= 0, tiles, 0).ravel()
+            return jnp.zeros((n,), jnp.int32).at[flat_ids].add(
+                w.ravel().astype(jnp.int32), mode="drop"
+            )
+
+        return jax.vmap(one_query)(query_keywords)

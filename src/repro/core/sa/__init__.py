@@ -1,0 +1,1 @@
+from repro.core.sa import document, ngram, relational, verify  # noqa: F401

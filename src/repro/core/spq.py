@@ -1,0 +1,73 @@
+"""SPQ baseline: iterative bucket k-selection (paper appendix, after [9]).
+
+This is the "GPU-SPQ / GEN-SPQ" competitor the paper benchmarks against
+(Figs 9/10/13, Table IV): extract the top-k of a value array by repeatedly
+partitioning the active value range into B buckets, locating the bucket that
+contains the k-th largest element, saving everything above it, and recursing
+into that bucket.  The paper reports convergence in 2-3 iterations; we run a
+fixed number of narrowing iterations (enough for integer counts to collapse
+the bucket width below 1) and then reuse the same threshold compaction as
+c-PQ, which keeps the comparison about the *selection strategy* (range
+narrowing over N vs. the bounded-count Gate).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import cpq as _cpq
+from repro.core.types import SearchParams, TopKResult
+
+
+def spq_select(
+    counts: jnp.ndarray,
+    params: SearchParams,
+    n_buckets: int = 32,
+    n_iters: int = 4,
+) -> TopKResult:
+    """Bucket k-selection: counts int [Q, N] -> exact top-k."""
+    q, n = counts.shape
+    c = counts.astype(jnp.float32)
+    k = params.k
+
+    lo = jnp.min(c, axis=-1)                             # [Q] active range lower
+    hi = jnp.max(c, axis=-1)                             # [Q] active range upper
+    saved = jnp.zeros((q,), dtype=jnp.int32)             # elems strictly above range
+
+    for _ in range(n_iters):
+        width = jnp.maximum((hi - lo) / n_buckets, 1e-6)
+        # bucket id of each element; elements outside [lo, hi] are clamped away
+        b = jnp.clip(((c - lo[:, None]) / width[:, None]).astype(jnp.int32), -1, n_buckets)
+        in_range = (c >= lo[:, None]) & (c <= hi[:, None])
+        b = jnp.where(in_range, jnp.minimum(b, n_buckets - 1), -1)
+        hist = jnp.sum(
+            (b[..., None] == jnp.arange(n_buckets, dtype=jnp.int32)).astype(jnp.int32),
+            axis=1,
+        )                                                 # [Q, B]
+        # suffix count of elements in bucket >= t
+        suffix = jnp.flip(jnp.cumsum(jnp.flip(hist, -1), -1), -1)
+        need = k - saved                                  # remaining to find
+        # selected bucket: largest b* with suffix[b*] >= need
+        ok = suffix >= need[:, None]
+        bstar = jnp.where(
+            jnp.any(ok, axis=-1),
+            n_buckets - 1 - jnp.argmax(jnp.flip(ok, -1), axis=-1),
+            0,
+        )
+        above = jnp.where(
+            bstar + 1 < n_buckets,
+            jnp.take_along_axis(suffix, jnp.minimum(bstar + 1, n_buckets - 1)[:, None], -1)[:, 0],
+            0,
+        )
+        above = jnp.where(bstar + 1 < n_buckets, above, 0)
+        saved = saved + above
+        new_lo = lo + bstar.astype(jnp.float32) * width
+        new_hi = new_lo + width
+        lo, hi = new_lo, new_hi
+
+    # For integer counts the final bucket width < 1, so ceil(lo) is the k-th
+    # value; select with the shared compaction machinery.
+    threshold = jnp.ceil(lo - 1e-4).astype(jnp.int32)
+    cap = params.cap()
+    cand_ids, cand_vals = _cpq._compact_candidates(counts, threshold, cap)
+    ids, vals = _cpq.topk_from_candidates(cand_ids, cand_vals, params.k)
+    return TopKResult(ids=ids, counts=vals, threshold=threshold)

@@ -1,0 +1,78 @@
+"""Core types for the GENIE match-count / top-k search framework."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Engine(str, enum.Enum):
+    """Match-count execution engines (see DESIGN.md section 2).
+
+    EQ      -- signature equality compare (LSH-transformed data).
+    RANGE   -- per-attribute interval predicate (relational data).
+    MINSUM  -- multiset intersection  sum_v min(c_data, c_query)  (SA n-grams).
+    IP      -- binary inner product on the MXU (SA documents / sets).
+    """
+
+    EQ = "eq"
+    RANGE = "range"
+    MINSUM = "minsum"
+    IP = "ip"
+
+
+class TopKMethod(str, enum.Enum):
+    CPQ = "cpq"          # the paper's c-PQ (histogram gate, Theorem 3.1)
+    SPQ = "spq"          # baseline: bucket k-selection (paper appendix / GPU-SPQ)
+    SORT = "sort"        # baseline: full lax.top_k (sort-based)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TopKResult:
+    """Result of a top-k match-count query batch.
+
+    ids:       int32 [Q, k]  object ids (-1 padding when fewer than k objects).
+    counts:    int32 [Q, k]  match-count values, non-increasing along k.
+    threshold: int32 [Q]     AT-1 per Theorem 3.1 == match count of the k-th object.
+    """
+
+    ids: jnp.ndarray
+    counts: jnp.ndarray
+    threshold: jnp.ndarray
+
+    @property
+    def k(self) -> int:
+        return self.ids.shape[-1]
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Static parameters of a GENIE search."""
+
+    k: int
+    max_count: int                 # count-domain bound (e.g. m for LSH, #attrs for tables)
+    method: TopKMethod = TopKMethod.CPQ
+    candidate_cap: Optional[int] = None  # capacity of the candidate buffer (default 2k)
+    use_kernel: bool = True        # Pallas kernels (interpret=True off-TPU) vs pure jnp
+
+    def cap(self) -> int:
+        if self.candidate_cap is not None:
+            return max(self.candidate_cap, self.k)
+        return max(2 * self.k, self.k + 16)
+
+
+@dataclasses.dataclass
+class IndexStats:
+    """Host-side statistics recorded at index-build time."""
+
+    n_objects: int = 0
+    n_lists: int = 0
+    total_postings: int = 0
+    max_list_len: int = 0
+    bytes_device: int = 0
+    build_seconds: float = 0.0
+    extra: dict[str, Any] = dataclasses.field(default_factory=dict)

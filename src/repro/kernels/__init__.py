@@ -1,0 +1,4 @@
+# Pallas TPU kernels for GENIE's compute hot-spots (match-count engines and
+# the c-PQ gate histogram).  Each kernel module holds the pl.pallas_call +
+# BlockSpec implementation; ops.py is the jit'd public wrapper; ref.py the
+# pure-jnp oracle.  Off-TPU they run in interpret mode.

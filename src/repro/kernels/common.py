@@ -1,0 +1,46 @@
+"""Shared utilities for the Pallas TPU kernels.
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling); on any other
+backend (this CPU container) they run in interpret mode, executing the kernel
+body in Python for bit-exact validation against the ref.py oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=1)
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def use_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return not on_tpu()
+    return interpret
+
+
+def pad_to(x: jnp.ndarray, multiple: int, axis: int, value) -> jnp.ndarray:
+    """Pad `axis` of x up to the next multiple with a constant."""
+    size = x.shape[axis]
+    target = -(-size // multiple) * multiple
+    if target == size:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - size)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def ceil_to(size: int, multiple: int) -> int:
+    return -(-size // multiple) * multiple
+
+
+def pick_tile(size: int, preferred: int, align: int) -> int:
+    """Tile size: `preferred` when the dim is big enough, else the whole
+    (alignment-padded) dim."""
+    if size >= preferred:
+        return preferred
+    return ceil_to(max(size, 1), align)

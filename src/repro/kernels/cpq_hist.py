@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: c-PQ count histogram (the Gate's ZipperArray source).
+
+hist[q, t] = #{ n : counts[q, n] == t },  t in [0, nbins)
+
+The c-PQ Gate (paper section III-C) needs ZA[t] = #{count >= t}; since counts
+live in the bounded domain [0, max_count] (the Bitmap-Counter observation),
+ZA is the suffix-sum of this histogram.  The kernel streams count tiles from
+HBM and accumulates per-query histograms in the output VMEM block across the
+N grid axis; the AuditThreshold and candidate compaction are computed from the
+histogram in core/cpq.py.  Padded count entries are -1 and match no bin.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_Q = 8     # queries per cell (keeps the one-hot temp in VMEM)
+TILE_N = 512   # counts per cell
+
+
+def _cpq_hist_kernel(c_ref, h_ref, *, nbins: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    c = c_ref[...].astype(jnp.int32)                       # [TQ, TN]
+    bins = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nbins), 2)
+    onehot = (c[:, :, None] == bins).astype(jnp.int32)     # [TQ, TN, B]
+    h_ref[...] += jnp.sum(onehot, axis=1)
+
+
+def cpq_hist_pallas(
+    counts: jnp.ndarray,
+    nbins: int,
+    *,
+    tile_q: int = TILE_Q,
+    tile_n: int = TILE_N,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """hist int32 [Q, nbins]; counts int [Q, N] padded with -1, Q % tile_q == 0,
+    N % tile_n == 0, nbins % 128 == 0 (ops.py pads; extra bins read zero)."""
+    qn, nn = counts.shape
+    assert qn % tile_q == 0 and nn % tile_n == 0
+    grid = (qn // tile_q, nn // tile_n)
+    kernel = functools.partial(_cpq_hist_kernel, nbins=nbins)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile_q, tile_n), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((tile_q, nbins), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((qn, nbins), jnp.int32),
+        interpret=interpret,
+    )(counts)

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: IP match-count (binary inner product on the MXU).
+
+counts[q, n] = sum_v query_bin[q, v] * data_bin[n, v]
+
+The short-document model (paper section V-B): MC == inner product of binary
+word vectors.  Unlike the VPU compare kernels this one rides the MXU -- a
+classic tiled matmul with bf16 inputs and f32 accumulation across the V grid
+axis, giving the compute-bound roofline corner of the engine family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_Q = 128
+TILE_N = 256
+TILE_V = 512
+
+
+def _ip_kernel(q_ref, d_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        q_ref[...], d_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def ip_count_pallas(
+    data_bin: jnp.ndarray,
+    query_bin: jnp.ndarray,
+    *,
+    tile_q: int = TILE_Q,
+    tile_n: int = TILE_N,
+    tile_v: int = TILE_V,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns f32 [Q, N] (ops.py rounds to int32).  Inputs bf16/f32 {0,1}."""
+    qn, v = query_bin.shape
+    nn = data_bin.shape[0]
+    assert qn % tile_q == 0 and nn % tile_n == 0 and v % tile_v == 0
+    grid = (qn // tile_q, nn // tile_n, v // tile_v)
+    return pl.pallas_call(
+        _ip_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, tile_v), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tile_n, tile_v), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, tile_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qn, nn), jnp.float32),
+        interpret=interpret,
+    )(query_bin.astype(jnp.bfloat16), data_bin.astype(jnp.bfloat16))

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: EQ match-count (LSH signature compare).
+
+counts[q, n] = sum_i (data_sigs[n, i] == query_sigs[q, i])
+
+This is GENIE's inverted-index scan re-expressed for the TPU (DESIGN.md
+section 2): instead of scanning postings lists with atomic counter updates,
+each grid cell compares a [TILE_Q, m] query-signature block against a
+[TILE_N, m] data-signature block held in VMEM and emits a dense [TILE_Q,
+TILE_N] count tile.  The compare runs on the VPU in m/CHUNK vectorised steps;
+the signature matrix streams from HBM exactly once per query tile, giving the
+memory-bound roofline analysed in EXPERIMENTS.md.
+
+Grid: (Q/TILE_Q, N/TILE_N); each cell is independent (embarrassingly
+parallel -- the TPU analogue of the paper's "one block per query item" with
+perfect load balance by construction).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_Q = 128   # query rows per grid cell
+TILE_N = 256   # objects per grid cell (minor-most in the output tile)
+CHUNK = 8      # hash functions folded per vector step ([TQ, TN, CHUNK] temp)
+
+
+def _match_count_kernel(q_ref, d_ref, o_ref, *, m: int, chunk: int):
+    q = q_ref[...]  # [TQ, Mp] int32
+    d = d_ref[...]  # [TN, Mp] int32
+    acc = jnp.zeros((q.shape[0], d.shape[0]), dtype=jnp.int32)
+    for s in range(0, m, chunk):  # static unroll over signature chunks
+        e = min(s + chunk, m)
+        qs = q[:, s:e]
+        ds = d[:, s:e]
+        hit = qs[:, None, :] == ds[None, :, :]             # [TQ, TN, c]
+        acc = acc + jnp.sum(hit.astype(jnp.int32), axis=-1)
+    o_ref[...] = acc
+
+
+def match_count_pallas(
+    data_sigs: jnp.ndarray,
+    query_sigs: jnp.ndarray,
+    *,
+    tile_q: int = TILE_Q,
+    tile_n: int = TILE_N,
+    chunk: int = CHUNK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """counts int32 [Q, N].  Inputs must already be padded: Q % tile_q == 0,
+    N % tile_n == 0 (ops.py handles padding/slicing)."""
+    qn, m = query_sigs.shape
+    nn = data_sigs.shape[0]
+    assert qn % tile_q == 0 and nn % tile_n == 0, (qn, nn, tile_q, tile_n)
+    grid = (qn // tile_q, nn // tile_n)
+    kernel = functools.partial(_match_count_kernel, m=m, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, m), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qn, nn), jnp.int32),
+        interpret=interpret,
+    )(query_sigs.astype(jnp.int32), data_sigs.astype(jnp.int32))

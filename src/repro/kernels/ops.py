@@ -1,0 +1,143 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each wrapper pads inputs to tile multiples (with values that cannot produce
+spurious matches), dispatches to the kernel (interpret mode off-TPU), and
+slices the result back to logical shape.  These are the functions the GENIE
+engines call; repro.kernels.ref holds the oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels import cpq_hist as _cpq_hist
+from repro.kernels import ip_count as _ip
+from repro.kernels import match_count as _mc
+from repro.kernels import minsum_count as _ms
+from repro.kernels import range_count as _rc
+
+# Padding sentinels: data and query pads differ so padded rows/cols never match.
+_PAD_DATA = -1
+_PAD_QUERY = -2
+
+
+def _tiles(q: int, n: int, tq_pref: int, tn_pref: int) -> tuple[int, int]:
+    tq = common.pick_tile(q, tq_pref, 8)
+    tn = common.pick_tile(n, tn_pref, 128)
+    return tq, tn
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_n", "interpret"))
+def match_count(
+    data_sigs: jnp.ndarray,
+    query_sigs: jnp.ndarray,
+    *,
+    tile_q: int | None = None,
+    tile_n: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """EQ engine kernel: counts int32 [Q, N]."""
+    qn, m = query_sigs.shape
+    nn = data_sigs.shape[0]
+    tq, tn = _tiles(qn, nn, tile_q or _mc.TILE_Q, tile_n or _mc.TILE_N)
+    q = common.pad_to(query_sigs.astype(jnp.int32), tq, 0, _PAD_QUERY)
+    d = common.pad_to(data_sigs.astype(jnp.int32), tn, 0, _PAD_DATA)
+    out = _mc.match_count_pallas(
+        d, q, tile_q=tq, tile_n=tn, interpret=common.use_interpret(interpret)
+    )
+    return out[:qn, :nn]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_n", "interpret"))
+def range_count(
+    data_vals: jnp.ndarray,
+    q_lo: jnp.ndarray,
+    q_hi: jnp.ndarray,
+    *,
+    tile_q: int | None = None,
+    tile_n: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """RANGE engine kernel: counts int32 [Q, N]."""
+    qn, d = q_lo.shape
+    nn = data_vals.shape[0]
+    tq, tn = _tiles(qn, nn, tile_q or _rc.TILE_Q, tile_n or _rc.TILE_N)
+    # Padded queries use an empty range (lo > hi); padded data never matters
+    # because the output is sliced.
+    lo = common.pad_to(q_lo.astype(jnp.int32), tq, 0, 1)
+    hi = common.pad_to(q_hi.astype(jnp.int32), tq, 0, 0)
+    x = common.pad_to(data_vals.astype(jnp.int32), tn, 0, _PAD_DATA)
+    out = _rc.range_count_pallas(
+        x, lo, hi, tile_q=tq, tile_n=tn, interpret=common.use_interpret(interpret)
+    )
+    return out[:qn, :nn]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_n", "tile_v", "interpret"))
+def minsum_count(
+    data_cnt: jnp.ndarray,
+    query_cnt: jnp.ndarray,
+    *,
+    tile_q: int | None = None,
+    tile_n: int | None = None,
+    tile_v: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """MINSUM engine kernel: counts int32 [Q, N]."""
+    qn, v = query_cnt.shape
+    nn = data_cnt.shape[0]
+    tq, tn = _tiles(qn, nn, tile_q or _ms.TILE_Q, tile_n or _ms.TILE_N)
+    tv = common.pick_tile(v, tile_v or _ms.TILE_V, 128)
+    q = common.pad_to(common.pad_to(query_cnt.astype(jnp.int32), tq, 0, 0), tv, 1, 0)
+    d = common.pad_to(common.pad_to(data_cnt.astype(jnp.int32), tn, 0, 0), tv, 1, 0)
+    out = _ms.minsum_count_pallas(
+        d, q, tile_q=tq, tile_n=tn, tile_v=tv, interpret=common.use_interpret(interpret)
+    )
+    return out[:qn, :nn]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_n", "tile_v", "interpret"))
+def ip_count(
+    data_bin: jnp.ndarray,
+    query_bin: jnp.ndarray,
+    *,
+    tile_q: int | None = None,
+    tile_n: int | None = None,
+    tile_v: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """IP engine kernel: counts int32 [Q, N] (exact for counts < 2^24)."""
+    qn, v = query_bin.shape
+    nn = data_bin.shape[0]
+    tq, tn = _tiles(qn, nn, tile_q or _ip.TILE_Q, tile_n or _ip.TILE_N)
+    tv = common.pick_tile(v, tile_v or _ip.TILE_V, 128)
+    q = common.pad_to(common.pad_to(query_bin.astype(jnp.float32), tq, 0, 0), tv, 1, 0)
+    d = common.pad_to(common.pad_to(data_bin.astype(jnp.float32), tn, 0, 0), tv, 1, 0)
+    out = _ip.ip_count_pallas(
+        d, q, tile_q=tq, tile_n=tn, tile_v=tv, interpret=common.use_interpret(interpret)
+    )
+    return jnp.round(out[:qn, :nn]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("max_count", "tile_q", "tile_n", "interpret"))
+def cpq_hist(
+    counts: jnp.ndarray,
+    max_count: int,
+    *,
+    tile_q: int | None = None,
+    tile_n: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """c-PQ Gate histogram: int32 [Q, max_count + 1]."""
+    qn, nn = counts.shape
+    tq = common.pick_tile(qn, tile_q or _cpq_hist.TILE_Q, 8)
+    tn = common.pick_tile(nn, tile_n or _cpq_hist.TILE_N, 128)
+    nbins = common.ceil_to(max_count + 1, 128)
+    c = common.pad_to(common.pad_to(counts.astype(jnp.int32), tq, 0, -1), tn, 1, -1)
+    out = _cpq_hist.cpq_hist_pallas(
+        c, nbins, tile_q=tq, tile_n=tn, interpret=common.use_interpret(interpret)
+    )
+    return out[:qn, : max_count + 1]

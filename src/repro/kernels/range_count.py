@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: RANGE match-count (relational range queries).
+
+counts[q, n] = sum_d (q_lo[q, d] <= data_vals[n, d] <= q_hi[q, d])
+
+The relational inverted index of paper Example 2.1 maps each (attribute,
+value) pair to a postings list and a query item to a contiguous run of
+lists; the equivalent dense computation is a per-attribute interval test.
+Same grid/tiling scheme as match_count (VPU, two compares per attribute).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_Q = 128
+TILE_N = 256
+CHUNK = 8
+
+
+def _range_count_kernel(lo_ref, hi_ref, x_ref, o_ref, *, d: int, chunk: int):
+    lo = lo_ref[...]  # [TQ, Dp]
+    hi = hi_ref[...]
+    x = x_ref[...]    # [TN, Dp]
+    acc = jnp.zeros((lo.shape[0], x.shape[0]), dtype=jnp.int32)
+    for s in range(0, d, chunk):
+        e = min(s + chunk, d)
+        xs = x[None, :, s:e]
+        hit = (xs >= lo[:, None, s:e]) & (xs <= hi[:, None, s:e])
+        acc = acc + jnp.sum(hit.astype(jnp.int32), axis=-1)
+    o_ref[...] = acc
+
+
+def range_count_pallas(
+    data_vals: jnp.ndarray,
+    q_lo: jnp.ndarray,
+    q_hi: jnp.ndarray,
+    *,
+    tile_q: int = TILE_Q,
+    tile_n: int = TILE_N,
+    chunk: int = CHUNK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    qn, d = q_lo.shape
+    nn = data_vals.shape[0]
+    assert qn % tile_q == 0 and nn % tile_n == 0
+    grid = (qn // tile_q, nn // tile_n)
+    kernel = functools.partial(_range_count_kernel, d=d, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qn, nn), jnp.int32),
+        interpret=interpret,
+    )(q_lo.astype(jnp.int32), q_hi.astype(jnp.int32), data_vals.astype(jnp.int32))

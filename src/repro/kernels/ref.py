@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for every Pallas kernel (the reference semantics).
+
+The engine references live in repro.core.match; they are re-exported here so
+tests can sweep (kernel vs ref) from one import site.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.match import (  # noqa: F401
+    match_eq,
+    match_ip,
+    match_minsum,
+    match_range,
+)
+
+
+def cpq_hist(counts: jnp.ndarray, nbins: int) -> jnp.ndarray:
+    """hist[q, t] = #{n : counts[q, n] == t} for t in [0, nbins)."""
+    c = counts.astype(jnp.int32)
+    bins = jnp.arange(nbins, dtype=jnp.int32)
+    return jnp.sum((c[..., None] == bins).astype(jnp.int32), axis=1)

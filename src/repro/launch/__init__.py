@@ -1,0 +1,5 @@
+# Launch layer: mesh construction, sharding policy, input shapes, dry-run,
+# and the train/serve CLI drivers.  NOTE: dryrun must be executed as
+# `python -m repro.launch.dryrun` (it sets XLA_FLAGS before importing jax);
+# do not import it from code that already initialised jax.
+from repro.launch import mesh, shapes, sharding  # noqa: F401

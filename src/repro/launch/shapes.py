@@ -1,0 +1,86 @@
+"""Assigned input shapes and per-(arch, shape) ShapeDtypeStruct builders.
+
+    train_4k     seq=4096,   global_batch=256   (training)      -> train_step
+    prefill_32k  seq=32768,  global_batch=32    (prefill)       -> prefill
+    decode_32k   seq=32768,  global_batch=128   (decode)        -> decode_step
+    long_500k    seq=524288, global_batch=1     (long decode)   -> decode_step,
+                 sub-quadratic archs only (mamba2 / zamba2); pure full-attention
+                 archs are recorded as skipped (DESIGN.md section 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, ssm, transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+SDS = jax.ShapeDtypeStruct
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(supported, reason-if-skipped) for an (arch, shape) cell."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, "full quadratic attention at 500k context (assignment rule: skip)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Batch ShapeDtypeStructs for the full-sequence entry points
+    (train_step / prefill): weak-type-correct, shardable, no allocation."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        return {
+            "patch_embeds": SDS((b, cfg.n_patches, cfg.d_model), jnp.bfloat16),
+            "tokens": SDS((b, s - cfg.n_patches), jnp.int32),
+        }
+    if cfg.family == "audio":
+        return {
+            "frames": SDS((b, s, cfg.d_model), jnp.bfloat16),
+            "tokens": SDS((b, s), jnp.int32),
+        }
+    return {"tokens": SDS((b, s), jnp.int32)}
+
+
+def token_specs(cfg: ModelConfig, shape: ShapeSpec) -> SDS:
+    """Single decode-step token batch."""
+    return SDS((shape.global_batch, 1), jnp.int32)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """KV/state cache ShapeDtypeStructs for decode cells (cap = seq_len)."""
+    b, cap = shape.global_batch, shape.seq_len
+    if cfg.family in ("dense", "moe"):
+        return jax.eval_shape(lambda: transformer.init_cache(cfg, b, cap))
+    if cfg.family == "vlm":
+        return jax.eval_shape(lambda: transformer.init_cache(cfg, b, cap))
+    if cfg.family == "ssm":
+        return jax.eval_shape(lambda: ssm.init_cache(cfg, b))
+    if cfg.family == "hybrid":
+        return jax.eval_shape(lambda: hybrid.init_cache(cfg, b, cap))
+    if cfg.family == "audio":
+        kvh, hd = cfg.n_kv_heads, cfg.head_dim
+        return {
+            "k": SDS((cfg.n_layers, b, cap, kvh, hd), jnp.bfloat16),
+            "v": SDS((cfg.n_layers, b, cap, kvh, hd), jnp.bfloat16),
+            "memory": SDS((b, cap, cfg.d_model), jnp.bfloat16),
+        }
+    raise ValueError(cfg.family)

@@ -1,0 +1,264 @@
+"""Sharding policy: map every parameter / batch / cache tensor onto the
+(pod, data, model) mesh with per-dimension divisibility checks.
+
+Strategy (DESIGN.md section 4):
+  * TP over "model": the largest divisible non-stack dimension of each weight
+    (d_ff, head, or vocab dim in practice -- Megatron-style), biases/norms
+    replicated.
+  * FSDP (ZeRO-3) over "data": the largest remaining divisible dimension of
+    each weight; optimizer moments inherit the same spec.
+  * DP over ("pod", "data") for batch dims; parameters are replicated across
+    "pod" (grad all-reduce crosses pods once per step).
+  * Layer-stack leading dims (consumed by lax.scan) stay unsharded.
+  * KV caches: batch over DP when divisible; kv-heads over "model" when
+    divisible, else head_dim (always 16-divisible for the assigned archs).
+
+Indivisible dims (smollm's 15 heads, mistral's kv=8, qwen2-moe's 60 experts)
+simply fall through to the next candidate dimension -- the policy degrades
+per-tensor instead of failing per-model.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+from repro.models.config import ModelConfig
+
+# pytree path prefixes whose leading dim(s) are scan stacks
+_STACK1 = ("blocks", "enc_blocks", "dec_blocks", "lora")
+_STACK2 = ("mamba",)  # hybrid: [n_inv, period, ...]
+
+
+def _path_keys(path) -> list[str]:
+    keys = []
+    for p in path:
+        if hasattr(p, "key"):
+            keys.append(str(p.key))
+        elif hasattr(p, "name"):
+            keys.append(str(p.name))
+        else:
+            keys.append(str(getattr(p, "idx", p)))
+    return keys
+
+
+def _n_stack_dims(keys: list[str]) -> int:
+    for k in keys:
+        if k in _STACK2:
+            return 2
+        if k in _STACK1:
+            return 1
+    return 0
+
+
+# Megatron-style TP placement by weight name: which (negative, post-stack)
+# dim is sharded over "model".  Column-parallel weights shard their OUTPUT
+# dim (no extra comm); row-parallel weights shard their INPUT dim (one
+# activation all-reduce after the matmul).  Sharding a contraction dim of a
+# column-parallel weight instead inserts an all-reduce per projection --
+# measured 67 GB/device/step of spurious all-reduce on smollm train_4k before
+# this table existed (EXPERIMENTS.md section Perf, iteration 4).
+_TP_RULES: dict[str, int | None] = {
+    # attention: qkv column-parallel (heads out), wo row-parallel (heads in)
+    "wq": -1, "wk": -1, "wv": -1, "wo": -2,
+    # MLP: gate/up column-parallel (d_ff out), down row-parallel (d_ff in)
+    "w_gate": -1, "w_up": -1, "w_down": -2,
+    # embeddings: vocab-parallel table; head column-parallel (vocab out)
+    "embed": -2, "lm_head": -1,
+    # mamba2: fused in_proj stays model-replicated (its packed z|xBC|dt split
+    # does not align with shard boundaries); SSD runs head-sharded via
+    # activation hints; out_proj row-parallel
+    "in_proj": None, "out_proj": -2, "conv_w": -1,
+    # MoE: per-expert d_ff sharded (EP folds into TP only when E % 16 == 0)
+    "router": None,
+    # zamba2 LoRA: B column-parallel, A replicated over model
+    "a_q": None, "b_q": -1,
+    "shared_gate": None,
+}
+
+
+def param_spec(name: str, shape: tuple[int, ...], n_stack: int, tp: int, dp: int,
+               use_tp: bool = True) -> P:
+    axes: list[Any] = [None] * len(shape)
+    free = list(range(n_stack, len(shape)))
+    if len(free) >= 2:
+        tp_dim = None
+        rule = _TP_RULES.get(name, -1)  # default: column-parallel last dim
+        if use_tp and rule is not None:
+            cand = len(shape) + rule if rule < 0 else n_stack + rule
+            if cand in free and shape[cand] % tp == 0:
+                tp_dim = cand
+                axes[tp_dim] = "model"
+        rest = sorted((i for i in free if i != tp_dim), key=lambda i: -shape[i])
+        # FSDP: without TP the "model" axis joins the ZeRO shard group.
+        fsdp_groups = (("data",),) if use_tp else (("data", "model"), ("data",), ("model",))
+        done = False
+        for grp in fsdp_groups:
+            size = dp if grp == ("data",) else (
+                dp * tp if len(grp) == 2 else tp
+            )
+            for i in rest:
+                if shape[i] % size == 0:
+                    axes[i] = grp if len(grp) > 1 else grp[0]
+                    done = True
+                    break
+            if done:
+                break
+    # 1-D (biases / norms / A_log): replicate
+    return P(*axes)
+
+
+def params_shardings(params_shapes: Any, mesh: jax.sharding.Mesh, use_tp: bool = True) -> Any:
+    tp = mesh_lib.tp_size(mesh)
+    dp = int(mesh.shape["data"])
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        name = keys[-1] if keys else ""
+        spec = param_spec(name, tuple(leaf.shape), _n_stack_dims(keys), tp, dp, use_tp)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def state_shardings(state_shapes: Any, params_sh: Any, mesh: jax.sharding.Mesh) -> Any:
+    """TrainState shardings: params/m/v share specs; scalars replicated."""
+    rep = NamedSharding(mesh, P())
+
+    def build(path, leaf):
+        keys = _path_keys(path)
+        if keys and keys[0] in ("params",):
+            return _lookup(params_sh, keys[1:])
+        if keys[:2] == ["opt", "m"] or keys[:2] == ["opt", "v"]:
+            return _lookup(params_sh, keys[2:])
+        if keys and keys[0] == "compress_error":
+            return _lookup(params_sh, keys[1:]) if len(keys) > 1 else rep
+        return rep
+
+    return jax.tree_util.tree_map_with_path(build, state_shapes)
+
+
+def _lookup(tree, keys):
+    node = tree
+    for k in keys:
+        if isinstance(node, dict):
+            node = node[k]
+        elif isinstance(node, (list, tuple)):
+            node = node[int(k)]
+        else:
+            node = getattr(node, k)
+    return node
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_shapes: dict, mesh: jax.sharding.Mesh, use_tp: bool = True) -> dict:
+    dpa = mesh_lib.dp_axes(mesh)
+    if not use_tp:
+        dpa = dpa + ("model",)
+
+    # candidate axis groups, largest first; contiguous subsets (not only
+    # prefixes): global_batch=256 on the 512-chip mesh divides (data, model)
+    # but not (pod, data, model) -- prefix-only search left the model axis
+    # idle and 16x replicated activations (EXPERIMENTS.md Perf iter 8).
+    import math as _m
+
+    cands = [dpa[i:j] for i in range(len(dpa)) for j in range(len(dpa), i, -1)]
+    cands.sort(key=lambda c: -_m.prod(mesh.shape[a] for a in c))
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        axes: list[Any] = [None] * len(shape)
+        for cand in cands:
+            total = _m.prod(mesh.shape[a] for a in cand)
+            if shape and shape[0] % total == 0:
+                axes[0] = cand if len(cand) > 1 else cand[0]
+                break
+            if len(shape) > 1 and shape[1] % total == 0:
+                axes[1] = cand if len(cand) > 1 else cand[0]  # SP fallback
+                break
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree_util.tree_map(one, batch_shapes)
+
+
+def _shard_batch_dim(axes, dim, size, mesh, dpa):
+    """Greedy: shard `dim` over the longest divisible prefix of dpa.
+    Returns the axes actually used (so other dims avoid them)."""
+    cand = tuple(dpa)
+    while cand:
+        import math as _m
+
+        total = _m.prod(mesh.shape[a] for a in cand)
+        if size % total == 0:
+            axes[dim] = cand if len(cand) > 1 else cand[0]
+            return set(cand)
+        cand = cand[:-1]
+    return set()
+
+
+def cache_shardings(cfg: ModelConfig, cache_shapes: Any, mesh: jax.sharding.Mesh) -> Any:
+    """Decode caches dominate serving memory (a replicated mistral-large
+    32k cache is ~1.5 TB); shard greedily: batch over the longest divisible
+    DP prefix, kv-heads/head_dim over "model" when free, and finally the
+    cache length itself over whatever axis remains (GSPMD handles the
+    cross-shard attention reduction)."""
+    dpa = mesh_lib.dp_axes(mesh)
+    if not cfg.use_tp_serve:   # caches exist only on the serve path
+        dpa = dpa + ("model",)
+    tp = mesh_lib.tp_size(mesh)
+
+    def kv_spec(shape):
+        # [L/I, B, cap, KV, hd]
+        axes: list[Any] = [None] * len(shape)
+        used = _shard_batch_dim(axes, 1, shape[1], mesh, dpa)
+        b, cap, kvh, hd = shape[1], shape[2], shape[3], shape[4]
+        if "model" not in used:
+            if kvh % tp == 0:
+                axes[3] = "model"
+            elif hd % tp == 0:
+                axes[4] = "model"
+            elif cap % tp == 0:
+                axes[2] = "model"
+        elif "data" not in used and cap % int(mesh.shape["data"]) == 0:
+            axes[2] = "data"
+        return P(*axes)
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        shape = tuple(leaf.shape)
+        name = keys[-1] if keys else ""
+        if name in ("k", "v", "attn_k", "attn_v"):
+            return NamedSharding(mesh, kv_spec(shape))
+        axes: list[Any] = [None] * len(shape)
+        if name == "memory":                       # [B, S, D]
+            used = _shard_batch_dim(axes, 0, shape[0], mesh, dpa)
+            if "model" not in used and shape[-1] % tp == 0:
+                axes[-1] = "model"
+            return NamedSharding(mesh, P(*axes))
+        if name == "ssm":                          # [L(,P), B, h, n, p]
+            bdim = len(shape) - 4
+            used = _shard_batch_dim(axes, bdim, shape[bdim], mesh, dpa)
+            if "model" not in used and shape[bdim + 1] % tp == 0:
+                axes[bdim + 1] = "model"
+            return NamedSharding(mesh, P(*axes))
+        if name == "conv":                         # [L(,P), B, W-1, cch]
+            bdim = len(shape) - 3
+            used = _shard_batch_dim(axes, bdim, shape[bdim], mesh, dpa)
+            if "model" not in used and shape[-1] % tp == 0:
+                axes[-1] = "model"
+            return NamedSharding(mesh, P(*axes))
+        # fallback: replicate
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def replicated(mesh: jax.sharding.Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,2 @@
+from repro.models import config, encdec, hybrid, layers, moe, registry, ssm, transformer  # noqa: F401
+from repro.models.config import ModelConfig  # noqa: F401

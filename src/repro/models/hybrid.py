@@ -1,0 +1,197 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a single weight-SHARED
+attention+MLP block applied every `shared_attn_period` layers, specialised
+per invocation by low-rank (LoRA) adapters on the attention projections
+(zamba2-2.7b: 54 mamba layers, shared block with 32 heads / d_ff 10240).
+
+Layer schedule (n_inv = n_layers / period groups):
+
+    for inv in range(n_inv):
+        h = shared_attention_block(h, shared_params, lora[inv])   # full attn
+        h = scan(mamba_layers[inv*P : (inv+1)*P])                 # SSD
+
+Both levels are lax.scan'd (outer xs = (per-group mamba stacks, per-inv LoRA,
+per-inv KV cache)), so HLO stays compact.  Decode keeps one KV cache segment
+per invocation plus per-layer SSM states; per-token cost is O(context) for
+the shared block and O(1) for the mamba layers -- sub-quadratic overall,
+which is why this arch runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.partition import tp_policy
+from repro.models.config import ModelConfig
+
+LORA_RANK = 64
+
+
+def n_invocations(cfg: ModelConfig) -> int:
+    assert cfg.shared_attn_period and cfg.n_layers % cfg.shared_attn_period == 0
+    return cfg.n_layers // cfg.shared_attn_period
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, km, ksh, kl, kh = jax.random.split(key, 5)
+    n_inv = n_invocations(cfg)
+    mamba = jax.vmap(lambda k: S.init_mamba_block(k, cfg, dtype))(
+        jax.random.split(km, cfg.n_layers)
+    )
+    # regroup stacked mamba blocks to [n_inv, period, ...]
+    period = cfg.shared_attn_period
+    mamba = jax.tree_util.tree_map(
+        lambda x: x.reshape((n_inv, period) + x.shape[1:]), mamba
+    )
+    out_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    k1, k2 = jax.random.split(ksh)
+    shared = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attention(k1, cfg, dtype, out_scale),
+        "mlp": L.init_mlp(k2, cfg, dtype, out_scale),
+    }
+    d, h, hd, r = cfg.d_model, cfg.n_heads, cfg.head_dim, LORA_RANK
+    lk = jax.random.split(kl, 2)
+    lora = {
+        "a_q": L.dense_init(lk[0], (n_inv, d, r), 1.0 / math.sqrt(d), dtype),
+        "b_q": jnp.zeros((n_inv, r, h * hd), dtype),  # zero-init: shared block exact at init
+    }
+    params = {
+        "embed": L.dense_init(ke, (cfg.vocab, cfg.d_model), 0.02, dtype),
+        "mamba": mamba,
+        "shared": shared,
+        "lora": lora,
+        "final_ln": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(kh, (cfg.d_model, cfg.vocab), 1.0 / math.sqrt(d), dtype)
+    return params
+
+
+def _shared_attn(cfg, shared, lora_inv, h, positions, cache=None, cache_pos=None):
+    """Shared attention + MLP block with per-invocation LoRA on W_q."""
+    xn = L.rms_norm(h, shared["ln1"], cfg.rms_eps)
+    # LoRA delta on q projection: x @ (Wq + Aq Bq)
+    attn_p = dict(shared["attn"])
+    attn_p["wq"] = attn_p["wq"] + jnp.einsum(
+        "dr,rk->dk", lora_inv["a_q"].astype(jnp.float32), lora_inv["b_q"].astype(jnp.float32)
+    ).astype(attn_p["wq"].dtype)
+    a, emitted = L.attention_block(
+        xn, attn_p, cfg, positions, causal=True, cache=cache, cache_pos=cache_pos
+    )
+    h = h + a
+    h = h + L.mlp_block(L.rms_norm(h, shared["ln2"], cfg.rms_eps), shared["mlp"], cfg)
+    return h, emitted
+
+
+def forward(cfg: ModelConfig, params, tokens, *, remat: bool = True,
+            emit_state: bool = False, use_tp=None):
+    with tp_policy(cfg.use_tp if use_tp is None else use_tp):
+        return _forward_inner(cfg, params, tokens, remat, emit_state)
+
+
+def _forward_inner(cfg, params, tokens, remat, emit_state):
+    cd = L.cdtype(cfg)
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def mamba_body(h, lp):
+        h2, states = S.mamba_block(h, lp, cfg)
+        return h2, states if emit_state else None
+
+    mamba_body = L.remat_wrap(mamba_body, remat)
+
+    def group_body(h, xs):
+        lora_inv, mamba_group = xs
+        h, kv = _shared_attn(cfg, params["shared"], lora_inv, h, positions)
+        h, states = jax.lax.scan(mamba_body, h, mamba_group,
+                                 unroll=cfg.shared_attn_period if cfg.scan_unroll else 1)
+        return h, (kv, states) if emit_state else None
+
+    if not emit_state:  # remat the whole group: shared-attn intermediates are
+        group_body = L.remat_wrap(group_body, remat)  # otherwise saved per group
+
+    h, emitted = jax.lax.scan(group_body, h, (params["lora"], params["mamba"]),
+                              unroll=n_invocations(cfg) if cfg.scan_unroll else 1)
+    hn = L.rms_norm(h, params["final_ln"], cfg.rms_eps)
+    w = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", hn, w.astype(hn.dtype)).astype(jnp.float32)
+    return logits, jnp.float32(0.0), emitted
+
+
+def init_cache(cfg: ModelConfig, batch: int, cap: int, dtype=jnp.bfloat16) -> dict:
+    n_inv = n_invocations(cfg)
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    ssm = S.init_cache(cfg, batch)
+    period = cfg.shared_attn_period
+    return {
+        "attn_k": jnp.zeros((n_inv, batch, cap, kvh, hd), dtype),
+        "attn_v": jnp.zeros((n_inv, batch, cap, kvh, hd), dtype),
+        "conv": ssm["conv"].reshape((n_inv, period) + ssm["conv"].shape[1:]),
+        "ssm": ssm["ssm"].reshape((n_inv, period) + ssm["ssm"].shape[1:]),
+    }
+
+
+def prefill(cfg: ModelConfig, params, tokens, *, cache_cap: Optional[int] = None):
+    logits, _, emitted = forward(cfg, params, tokens, remat=False, emit_state=True,
+                                 use_tp=cfg.use_tp_serve)
+    kv, states = emitted                         # kv: ([I,b,s,kv,hd], [I,...]) tuple
+    ks, vs = kv
+    conv_tails, ssm_states = states              # [I, P, b, ...]
+    s = ks.shape[2]
+    cap = cache_cap or s
+    if cap > s:
+        pad = [(0, 0), (0, 0), (0, cap - s), (0, 0), (0, 0)]
+        ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+    cache = {
+        "attn_k": ks.astype(jnp.bfloat16),
+        "attn_v": vs.astype(jnp.bfloat16),
+        "conv": conv_tails,
+        "ssm": ssm_states,
+    }
+    return logits[:, -1, :], cache, jnp.int32(s)
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, pos):
+    with tp_policy(cfg.use_tp_serve):
+        return _decode_inner(cfg, params, token, cache, pos)
+
+
+def _decode_inner(cfg, params, token, cache, pos):
+    cd = L.cdtype(cfg)
+    h = jnp.take(params["embed"], token, axis=0).astype(cd)
+    b = h.shape[0]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+
+    def mamba_body(h, xs):
+        lp, conv_s, ssm_s = xs
+        h2, nc, ns = S.mamba_block_decode(h, lp, cfg, conv_s, ssm_s)
+        return h2, (nc, ns)
+
+    def group_body(h, xs):
+        lora_inv, mamba_group, ck, cv, conv_g, ssm_g = xs
+        h, new_kv = _shared_attn(
+            cfg, params["shared"], lora_inv, h, positions,
+            cache={"k": ck, "v": cv}, cache_pos=pos,
+        )
+        h, (nconv, nssm) = jax.lax.scan(mamba_body, h, (mamba_group, conv_g, ssm_g),
+                                        unroll=cfg.shared_attn_period if cfg.scan_unroll else 1)
+        return h, (new_kv["k"], new_kv["v"], nconv, nssm)
+
+    h, (nk, nv, nconv, nssm) = jax.lax.scan(
+        group_body, h,
+        (params["lora"], params["mamba"], cache["attn_k"], cache["attn_v"],
+         cache["conv"], cache["ssm"]),
+        unroll=n_invocations(cfg) if cfg.scan_unroll else 1,
+    )
+    hn = L.rms_norm(h, params["final_ln"], cfg.rms_eps)
+    w = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", hn, w.astype(hn.dtype)).astype(jnp.float32)[:, 0, :]
+    return logits, {"attn_k": nk, "attn_v": nv, "conv": nconv, "ssm": nssm}

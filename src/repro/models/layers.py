@@ -1,0 +1,302 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (online-softmax
+chunked for long sequences), SwiGLU/GELU MLPs, embeddings.
+
+All functions are pure (params in, activations out) and layout-stable so the
+same code path serves train (full sequence), prefill (full sequence + cache
+emit) and decode (single position + cache read/write).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.partition import hint
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def remat_wrap(body, remat):
+    """Apply activation checkpointing to a scan body.
+
+    remat: False/"none" -> no remat; "dots" -> save matmul outputs (recompute
+    little, +~0.8 GB/layer/device at train_4k); True/"nothing" -> full remat
+    (one extra forward, flat memory).  Measured tradeoff in EXPERIMENTS.md
+    section Perf, iteration 3.
+    """
+    if remat in (False, None, "none"):
+        return body
+    if remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(body, policy=policy)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, S, H, D]; positions: [B, S] (or broadcastable)."""
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)                      # [half]
+    angles = positions[..., None].astype(jnp.float32) * freqs        # [B, S, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _soft_cap(scores: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def full_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, causal: bool,
+    softcap: float = 0.0, q_offset: jnp.ndarray | int = 0,
+    kv_len: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Reference attention (materialises [B, H, Sq, Sk] scores).
+
+    q: [B, Sq, H, D];  k, v: [B, Sk, KV, D];  GQA via head grouping.
+    q_offset: position of q[0] within the kv axis (decode: current step).
+    kv_len: valid kv prefix length (decode with a padded cache).
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = _soft_cap(scores * (1.0 / math.sqrt(d)), softcap)
+    kv_pos = jnp.arange(sk)
+    neg = jnp.finfo(jnp.float32).min
+    if causal:
+        q_pos = jnp.arange(sq) + q_offset
+        scores = jnp.where(q_pos[:, None] >= kv_pos[None, :], scores, neg)
+    if kv_len is not None:
+        scores = jnp.where(kv_pos[None, :] < kv_len[..., None, None, None, None], scores, neg)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def chunked_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, causal: bool,
+    softcap: float = 0.0, q_chunk: int = 512, k_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax attention: O(chunk^2) live memory for arbitrarily long S.
+
+    Flash-attention restructured for XLA: lax.scan over query chunks, inner
+    lax.scan over kv chunks carrying (running max, denominator, accumulator).
+    Exact (tested against full_attention).
+    """
+    b, s, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    if s % q_chunk or sk % k_chunk:
+        # fall back for ragged sizes (small models / tests)
+        return full_attention(q, k, v, causal=causal, softcap=softcap)
+    nq, nk = s // q_chunk, sk // k_chunk
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, nq, q_chunk, kv, g, d).astype(jnp.float32)
+    ks = k.reshape(b, nk, k_chunk, kv, d).astype(jnp.float32)
+    vs = v.reshape(b, nk, k_chunk, kv, d).astype(jnp.float32)
+    q_iota = jnp.arange(q_chunk)
+    k_iota = jnp.arange(k_chunk)
+    neg = jnp.float32(-1e30)
+
+    # jax.checkpoint: without it, the nested-scan backward saves every
+    # per-(q-chunk, kv-chunk) probability tile -- the full S^2 score matrix in
+    # f32 (measured: ~46 GB/device at S=4096 on the production mesh).  With
+    # it, the backward recomputes each q-chunk's inner scan (flash-attention
+    # style) and peak live memory drops to one chunk pair.  EXPERIMENTS.md
+    # section Perf, iteration 2.
+    @jax.checkpoint
+    def q_step(_, qi_qc):
+        qi, qc = qi_qc                                       # qc: [b, Cq, kv, g, d]
+
+        def kv_step(carry, kj_kc_vc):
+            m, l, acc = carry
+            kj, kc, vc = kj_kc_vc                            # kc/vc: [b, Ck, kv, d]
+            scores = jnp.einsum("bqkgd,bskd->bkgqs", qc, kc) * scale
+            scores = _soft_cap(scores, softcap)
+            if causal:
+                qpos = qi * q_chunk + q_iota
+                kpos = kj * k_chunk + k_iota
+                scores = jnp.where(qpos[:, None] >= kpos[None, :], scores, neg)
+            m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+            p = jnp.exp(scores - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, vc)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, g, q_chunk), neg, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0)),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)          # [b, kv, g, Cq, d]
+        return None, jnp.transpose(out, (0, 3, 1, 2, 4))      # [b, Cq, kv, g, d]
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, d)        # [b, S, H, d]
+    return out.astype(q.dtype)
+
+
+def attention_block(
+    x: jnp.ndarray,
+    p: dict,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    *,
+    causal: bool = True,
+    cache: Optional[dict] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+    use_rope: bool = True,
+    kv_override: Optional[tuple] = None,
+    long_chunked: bool = True,
+):
+    """GQA attention with optional KV cache.
+
+    cache: {"k": [B, cap, KV, D], "v": ...} -- when given with cache_pos, the
+    new K/V rows are written at cache_pos (decode); attention runs over the
+    cache prefix.  Returns (out [B, S, Dm], new_cache or emitted (k, v)).
+    kv_override: (k, v) cross-attention memory (encoder output), bypasses
+    K/V projection caching.
+    """
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dk->bsk", x, p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    q = hint(q, "dp", None, "tp", None)
+    if kv_override is None:
+        k = jnp.einsum("bsd,dk->bsk", x, p["wk"].astype(x.dtype)).reshape(b, s, kvh, hd)
+        v = jnp.einsum("bsd,dk->bsk", x, p["wv"].astype(x.dtype)).reshape(b, s, kvh, hd)
+        k = hint(k, "dp", None, "tp", None)
+        v = hint(v, "dp", None, "tp", None)
+        if cfg.qkv_bias:
+            q = q + p["bq"].reshape(h, hd).astype(x.dtype)
+            k = k + p["bk"].reshape(kvh, hd).astype(x.dtype)
+            v = v + p["bv"].reshape(kvh, hd).astype(x.dtype)
+        if use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+        if cfg.qkv_bias:
+            q = q + p["bq"].reshape(h, hd).astype(x.dtype)
+
+    new_cache = None
+    if cache is not None:
+        # decode / cached attention: write new kv at cache_pos, attend prefix
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        out = full_attention(
+            q, ck, cv, causal=False, softcap=cfg.attn_logit_softcap,
+            kv_len=cache_pos + s,
+        )
+        emitted = new_cache
+    elif kv_override is not None:
+        # cross-attention: chunk long sequences too (a 32k x 32k full score
+        # matrix is 68 GB/device on the seamless prefill cell -- measured)
+        if long_chunked and s >= 2048 and k.shape[1] >= 2048:
+            out = chunked_attention(q, k, v, causal=False, softcap=cfg.attn_logit_softcap)
+        else:
+            out = full_attention(q, k, v, causal=False, softcap=cfg.attn_logit_softcap)
+        emitted = None
+    else:
+        if long_chunked and s >= 2048:
+            out = chunked_attention(q, k, v, causal=causal, softcap=cfg.attn_logit_softcap)
+        else:
+            out = full_attention(q, k, v, causal=causal, softcap=cfg.attn_logit_softcap)
+        emitted = (k, v)
+    out = out.reshape(b, s, h * hd)
+    proj = jnp.einsum("bsk,kd->bsd", out, p["wo"].astype(x.dtype))
+    return hint(proj, "dp", None, None), emitted
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_block(x: jnp.ndarray, p: dict, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.mlp_type == "swiglu":
+        gate = hint(jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype)), "dp", None, "tp")
+        up = hint(jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype)), "dp", None, "tp")
+        out = jnp.einsum("bsf,fd->bsd", jax.nn.silu(gate) * up, p["w_down"].astype(x.dtype))
+        return hint(out, "dp", None, None)
+    up = hint(jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype)), "dp", None, "tp")
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(up), p["w_down"].astype(x.dtype))
+    return hint(out, "dp", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, scale: float, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_attention(key, cfg: ModelConfig, dtype, out_scale: float) -> dict:
+    h, kvh, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), s, dtype),
+        "wk": dense_init(ks[1], (d, kvh * hd), s, dtype),
+        "wv": dense_init(ks[2], (d, kvh * hd), s, dtype),
+        "wo": dense_init(ks[3], (h * hd, d), out_scale / math.sqrt(h * hd), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kvh * hd,), dtype)
+        p["bv"] = jnp.zeros((kvh * hd,), dtype)
+    return p
+
+
+def init_mlp(key, cfg: ModelConfig, dtype, out_scale: float, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (d, f), s, dtype),
+            "w_up": dense_init(ks[1], (d, f), s, dtype),
+            "w_down": dense_init(ks[2], (f, d), out_scale / math.sqrt(f), dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d, f), s, dtype),
+        "w_down": dense_init(ks[1], (f, d), out_scale / math.sqrt(f), dtype),
+    }

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity-bounded
+sort-free dispatch (qwen2-moe: 60 routed top-4 + shared experts; grok-1: 8
+routed top-2).
+
+Dispatch is the gather/scatter formulation (not the one-hot einsum): tokens
+are placed into [E, C] expert buffers via a cumulative-position scatter, each
+expert runs a dense SwiGLU on its buffer (active-expert FLOPs only --
+6*N_active*D, which is what the roofline's MODEL_FLOPS ratio checks), and
+results are combined back with routing weights.  Overflow tokens beyond
+capacity C = ceil(T * top_k / E * capacity_factor) are dropped (standard
+token-choice behaviour); the router is trained with the usual load-balance
+auxiliary loss.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.partition import hint
+
+
+def init_moe(key, cfg: ModelConfig, dtype, out_scale: float) -> dict:
+    d, e, fe = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "router": L.dense_init(ks[0], (d, e), s, jnp.float32),  # router in fp32
+        "w_gate": L.dense_init(ks[1], (e, d, fe), s, dtype),
+        "w_up": L.dense_init(ks[2], (e, d, fe), s, dtype),
+        "w_down": L.dense_init(ks[3], (e, fe, d), out_scale / math.sqrt(fe), dtype),
+    }
+    if cfg.shared_expert_d_ff:
+        p["shared"] = L.init_mlp(ks[4], cfg, dtype, out_scale, d_ff=cfg.shared_expert_d_ff)
+        p["shared_gate"] = L.dense_init(ks[5], (d, 1), s, dtype)
+    return p
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(n_tokens * cfg.experts_top_k * cfg.capacity_factor / cfg.n_experts))
+    # round up to a shardable multiple: an indivisible capacity replicates the
+    # [E, C, D] buffers across the mesh (qwen2-moe prefill: C=87382 -> 89 GB/dev
+    # measured; EXPERIMENTS.md Perf A3b).  512 = pod*data*model.
+    if c > 512:
+        c = -(-c // 512) * 512
+    return max(c, 1)
+
+
+def moe_ffn(x: jnp.ndarray, p: dict, cfg: ModelConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.experts_top_k
+    c = capacity(t, cfg)
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                        # [T, E]
+    top_p, top_e = jax.lax.top_k(probs, k)                          # [T, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)          # renormalise
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                                    # [E]
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=1), axis=0
+    )
+    aux = e * jnp.sum(me * ce)
+
+    # --- dispatch: position of each (token, slot) inside its expert buffer ---
+    # All buffer state stays [E, C]-shaped: flat [E*C] reshapes between
+    # differently-sharded layouts forced GSPMD into three 64 GB/layer
+    # buffer all-gathers on grok (measured; EXPERIMENTS.md Perf hillclimb A).
+    flat_e = top_e.reshape(-1)                                      # [T*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)             # [T*k, E]
+    pos_in_e = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1
+    token_of = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    scatter_idx = jnp.stack([flat_e, pos_in_e], axis=-1)            # [T*k, 2]
+    # out-of-capacity slots (pos_in_e >= C) fall outside the buffer and are
+    # dropped by scatter mode="drop" -- the token-choice dropping policy.
+    buf_tok = jnp.zeros((e, c), jnp.int32).at[
+        scatter_idx[:, 0], scatter_idx[:, 1]].set(token_of, mode="drop")
+    buf_used = jnp.zeros((e, c), jnp.bool_).at[
+        scatter_idx[:, 0], scatter_idx[:, 1]].set(True, mode="drop")
+    buf_w = jnp.zeros((e, c), jnp.float32).at[
+        scatter_idx[:, 0], scatter_idx[:, 1]].set(top_p.reshape(-1), mode="drop")
+
+    # Replicate the token activations once, then gather locally: a cross-shard
+    # gather is otherwise lowered as a full [E, C, D] all-reduce.
+    xf_rep = hint(xf, None, None)
+    x_buf = jnp.take(xf_rep, buf_tok, axis=0)                       # [E, C, D]
+    x_buf = x_buf * buf_used[..., None].astype(x_buf.dtype)
+    x_buf = hint(x_buf, "tp" if e % 16 == 0 else None, "dp", None)
+
+    # --- expert computation (dense per-expert SwiGLU) ---
+    # Weight hints force "gather the FSDP weight shards, not the buffers" --
+    # correct when buffers outweigh weights (training/prefill).  In decode the
+    # buffers are ~C*k tokens and the weights are tens of GB: keep the weights
+    # sharded and let GSPMD move the (tiny) buffers instead.
+    gather_weights = t * 3 * k >= cfg.n_experts * cfg.moe_d_ff  # buffer rows vs d_ff rows
+    wrole = "rep" if gather_weights else "dp"
+    wg = hint(p["w_gate"].astype(x_buf.dtype), None, wrole, "tp")
+    wu = hint(p["w_up"].astype(x_buf.dtype), None, wrole, "tp")
+    wd = hint(p["w_down"].astype(x_buf.dtype), None, "tp", wrole)
+    gate = hint(jnp.einsum("ecd,edf->ecf", x_buf, wg), None, "dp", "tp")
+    up = hint(jnp.einsum("ecd,edf->ecf", x_buf, wu), None, "dp", "tp")
+    y_buf = jnp.einsum("ecf,efd->ecd", jax.nn.silu(gate) * up, wd)  # [E, C, D]
+
+    # --- combine: weight in buffer space, scatter-add back to token space ---
+    y_buf = y_buf * (buf_w * buf_used.astype(jnp.float32)).astype(y_buf.dtype)[..., None]
+    y = jnp.zeros((t, d), y_buf.dtype).at[buf_tok].add(y_buf, mode="drop")
+    y = hint(y, "dp", None)
+
+    if "shared" in p:
+        sh = L.mlp_block(x, p["shared"], cfg)
+        sg = jax.nn.sigmoid(
+            jnp.einsum("bsd,do->bso", x.astype(jnp.float32), p["shared_gate"].astype(jnp.float32))
+        ).astype(x.dtype)
+        y = y.reshape(b, s, d) + sh * sg
+        return y, aux
+    return y.reshape(b, s, d), aux

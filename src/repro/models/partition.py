@@ -1,0 +1,96 @@
+"""Activation-sharding hints.
+
+`hint(x, roles...)` applies a with_sharding_constraint built from logical dim
+roles, resolved against the ambient abstract mesh (jax.sharding.set_mesh):
+
+    "dp"  -> batch-like dim over ("pod", "data") (whichever exist)
+    "tp"  -> feature-like dim over "model"
+    None  -> unsharded
+
+Each role is applied only when the dim size divides the axis size -- the same
+degrade-per-tensor policy as launch/sharding.py.  Outside a mesh context the
+function is a no-op, so model code runs unchanged in single-device tests.
+
+These hints exist because GSPMD propagation alone replicated the vocab dim of
+the logits (and the d_ff dim of MLP activations) on the production mesh,
+blowing per-device temp memory by ~25x -- measured in the dry-run and recorded
+as perf iteration 1 in EXPERIMENTS.md section Perf.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Per-trace policy: archs with use_tp=False treat the "model" axis as extra
+# data parallelism (see ModelConfig.use_tp).  Set by the family forward
+# functions around their trace bodies.
+_USE_TP = contextvars.ContextVar("repro_use_tp", default=True)
+
+
+@contextlib.contextmanager
+def tp_policy(use_tp: bool):
+    tok = _USE_TP.set(use_tp)
+    try:
+        yield
+    finally:
+        _USE_TP.reset(tok)
+
+
+def _mesh_axes() -> Optional[dict]:
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    names = getattr(am, "axis_names", ())
+    if not names:
+        return None
+    sizes = getattr(am, "axis_sizes", None)
+    if sizes is None:
+        shape = getattr(am, "shape", {})
+        sizes = tuple(shape[n] for n in names)
+    return dict(zip(names, sizes))
+
+
+def _resolve(role: Optional[str], dim: int, axes: dict):
+    use_tp = _USE_TP.get()
+    if role == "dp":
+        names = ("pod", "data") if use_tp else ("pod", "data", "model")
+        base = tuple(a for a in names if a in axes)
+        # contiguous subsets, largest first (see launch/sharding.py note)
+        cands = [base[i:j] for i in range(len(base)) for j in range(len(base), i, -1)]
+        cands.sort(key=lambda c: -math.prod(axes[a] for a in c))
+        for cand in cands:
+            total = math.prod(axes[a] for a in cand)
+            if dim % total == 0:
+                return cand if len(cand) > 1 else cand[0]
+        return None
+    if role == "tp":
+        if use_tp and "model" in axes and dim % axes["model"] == 0:
+            return "model"
+        return None
+    if role == "dpt":  # full-mesh shard (DP axes + model together)
+        cand = tuple(a for a in ("pod", "data", "model") if a in axes)
+        while cand:
+            total = math.prod(axes[a] for a in cand)
+            if dim % total == 0:
+                return cand if len(cand) > 1 else cand[0]
+            cand = cand[:-1]
+        return None
+    if role == "rep":  # explicitly replicated (forces an FSDP weight gather)
+        return None
+    return None
+
+
+def hint(x, *roles):
+    """Constrain x's sharding by per-dim logical roles (no-op without mesh)."""
+    axes = _mesh_axes()
+    if axes is None:
+        return x
+    assert len(roles) == x.ndim, (roles, x.shape)
+    spec = P(*(_resolve(r, d, axes) for r, d in zip(roles, x.shape)))
+    return jax.lax.with_sharding_constraint(x, spec)

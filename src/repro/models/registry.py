@@ -1,0 +1,164 @@
+"""Uniform model API over the six architecture families.
+
+Every family exposes:
+
+    init_params(cfg, key)                          -> params pytree
+    train_logits(cfg, params, batch, remat=True)   -> (logits, aux, labels)
+    prefill(cfg, params, batch, cache_cap)         -> (last_logits, cache, pos)
+    decode_step(cfg, params, token, cache, pos)    -> (logits, cache)
+
+`batch` is a dict:
+    dense / ssm / hybrid / moe : {"tokens": [B, S]}
+    vlm   : {"patch_embeds": [B, P, D], "tokens": [B, S-P]}   (frontend stub)
+    audio : {"frames": [B, S, D], "tokens": [B, S]}           (frontend stub)
+
+Labels are next-token shifts of the text tokens (modality prefixes excluded
+from the loss).  configs/ registers one ModelConfig per --arch id.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, ssm, transformer
+from repro.models.config import ModelConfig
+
+IGNORE = -100  # label id excluded from the loss
+
+
+def _shift_labels(tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.concatenate(
+        [tokens[:, 1:], jnp.full((tokens.shape[0], 1), IGNORE, tokens.dtype)], axis=1
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    family: str
+    init_params: Callable
+    train_logits: Callable      # (cfg, params, batch, remat) -> (logits, aux, labels)
+    prefill: Callable           # (cfg, params, batch, cache_cap) -> (logits, cache, pos)
+    decode_step: Callable       # (cfg, params, token, cache, pos) -> (logits, cache)
+    supports_decode: bool = True
+    sub_quadratic: bool = False
+
+
+# --- dense / moe -----------------------------------------------------------
+
+def _lm_train(cfg, params, batch, remat=True):
+    logits, aux, _ = transformer.forward(cfg, params, batch["tokens"], remat=remat)
+    return logits, aux, _shift_labels(batch["tokens"])
+
+
+def _lm_prefill(cfg, params, batch, cache_cap=None):
+    return transformer.prefill(cfg, params, batch["tokens"], cache_cap=cache_cap)
+
+
+_DENSE = ModelApi("dense", transformer.init_params, _lm_train, _lm_prefill,
+                  transformer.decode_step)
+_MOE = dataclasses.replace(_DENSE, family="moe")
+
+
+# --- ssm -------------------------------------------------------------------
+
+def _ssm_train(cfg, params, batch, remat=True):
+    logits, aux, _ = ssm.forward(cfg, params, batch["tokens"], remat=remat)
+    return logits, aux, _shift_labels(batch["tokens"])
+
+
+def _ssm_prefill(cfg, params, batch, cache_cap=None):
+    return ssm.prefill(cfg, params, batch["tokens"])
+
+
+_SSM = ModelApi("ssm", ssm.init_params, _ssm_train, _ssm_prefill, ssm.decode_step,
+                sub_quadratic=True)
+
+
+# --- hybrid ----------------------------------------------------------------
+
+def _hyb_train(cfg, params, batch, remat=True):
+    logits, aux, _ = hybrid.forward(cfg, params, batch["tokens"], remat=remat)
+    return logits, aux, _shift_labels(batch["tokens"])
+
+
+def _hyb_prefill(cfg, params, batch, cache_cap=None):
+    return hybrid.prefill(cfg, params, batch["tokens"], cache_cap=cache_cap)
+
+
+_HYBRID = ModelApi("hybrid", hybrid.init_params, _hyb_train, _hyb_prefill,
+                   hybrid.decode_step, sub_quadratic=True)
+
+
+# --- vlm (internvl2: patch-embedding prefix + dense LLM backbone) ----------
+
+def _vlm_train(cfg, params, batch, remat=True):
+    logits, aux, _ = transformer.forward(
+        cfg, params, batch["tokens"], embeds_prefix=batch["patch_embeds"], remat=remat
+    )
+    p = batch["patch_embeds"].shape[1]
+    text_labels = _shift_labels(batch["tokens"])
+    labels = jnp.concatenate(
+        [jnp.full((text_labels.shape[0], p), IGNORE, text_labels.dtype), text_labels], axis=1
+    )
+    return logits, aux, labels
+
+
+def _vlm_prefill(cfg, params, batch, cache_cap=None):
+    return transformer.prefill(
+        cfg, params, batch["tokens"], cache_cap=cache_cap,
+        embeds_prefix=batch["patch_embeds"],
+    )
+
+
+_VLM = ModelApi("vlm", transformer.init_params, _vlm_train, _vlm_prefill,
+                transformer.decode_step)
+
+
+# --- audio (seamless enc-dec) ----------------------------------------------
+
+def _audio_train(cfg, params, batch, remat=True):
+    logits, aux, _ = encdec.forward(cfg, params, batch["frames"], batch["tokens"], remat=remat)
+    return logits, aux, _shift_labels(batch["tokens"])
+
+
+def _audio_prefill(cfg, params, batch, cache_cap=None):
+    return encdec.prefill(cfg, params, batch["frames"], batch["tokens"], cache_cap=cache_cap)
+
+
+_AUDIO = ModelApi("audio", encdec.init_params, _audio_train, _audio_prefill,
+                  encdec.decode_step)
+
+
+_FAMILIES = {
+    "dense": _DENSE,
+    "moe": _MOE,
+    "ssm": _SSM,
+    "hybrid": _HYBRID,
+    "vlm": _VLM,
+    "audio": _AUDIO,
+}
+
+_CONFIGS: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _CONFIGS[cfg.arch_id] = cfg
+    return cfg
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if not _CONFIGS:
+        import repro.configs  # noqa: F401  (populates the registry)
+    return _CONFIGS[arch_id]
+
+
+def get_api(cfg: ModelConfig) -> ModelApi:
+    return _FAMILIES[cfg.family]
+
+
+def list_archs() -> list[str]:
+    if not _CONFIGS:
+        import repro.configs  # noqa: F401
+    return sorted(_CONFIGS)

@@ -1,0 +1,303 @@
+"""Mamba2 (SSD -- state-space duality) blocks: chunked parallel scan for
+train/prefill, O(1)-state recurrence for decode.  (mamba2-1.3b and the
+zamba2 backbone.)
+
+SSD recurrence per head (state S in R^{n x p}, decay a_t <= 0):
+
+    S_t = exp(a_t) S_{t-1} + dt_t B_t (x_t dt-weighted outer product)
+    y_t = C_t . S_t + D x_t
+
+Chunked algorithm (Dao & Gu 2024): within a chunk of length Lc the
+contribution of x_j to y_i (j <= i) is C_i.B_j exp(cum_i - cum_j) dt_j x_j --
+an attention-like [Lc, Lc] matmul on the MXU; across chunks only the [n, p]
+states are carried by a lax.scan.  Sequence length cost is O(S * Lc) instead
+of O(S^2): this is what makes the long_500k shape feasible and is validated
+against the naive recurrence in tests/test_ssm.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.partition import hint, tp_policy
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_state
+
+
+def init_mamba_block(key, cfg: ModelConfig, dtype) -> dict:
+    d, din = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_n_heads
+    cch = conv_channels(cfg)
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    proj_out = 2 * din + 2 * g * n + h
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "in_proj": L.dense_init(ks[0], (d, proj_out), s, dtype),
+        "conv_w": L.dense_init(ks[1], (cfg.conv_width, cch), 1.0 / math.sqrt(cfg.conv_width), dtype),
+        "conv_b": jnp.zeros((cch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), math.log(math.e - 1.0), jnp.float32),  # softplus^-1(1)
+        "norm": jnp.ones((din,), dtype),
+        "out_proj": L.dense_init(ks[2], (din, d), 1.0 / math.sqrt(2 * cfg.n_layers * din), dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kb, kh = jax.random.split(key, 3)
+    blocks = jax.vmap(lambda k: init_mamba_block(k, cfg, dtype))(
+        jax.random.split(kb, cfg.n_layers)
+    )
+    params = {
+        "embed": L.dense_init(ke, (cfg.vocab, cfg.d_model), 0.02, dtype),
+        "blocks": blocks,
+        "final_ln": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(kh, (cfg.d_model, cfg.vocab), 1.0 / math.sqrt(cfg.d_model), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(
+    x: jnp.ndarray, dt: jnp.ndarray, A_log: jnp.ndarray,
+    Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+    init_state: Optional[jnp.ndarray] = None,
+):
+    """x [b,s,h,p]; dt [b,s,h] (post-softplus); A_log [h]; Bm/Cm [b,s,g,n].
+
+    Returns (y [b,s,h,p], final_state [b,h,n,p]).
+    """
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    hg = h // g
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    f32 = jnp.float32
+    a = (-jnp.exp(A_log.astype(f32)) * dt.astype(f32))               # [b,s,h]
+    xd = x.astype(f32) * dt.astype(f32)[..., None]                   # [b,s,h,p]
+
+    a_c = jnp.moveaxis(a.reshape(b, nc, chunk, h), 3, 2)             # [b,c,h,l]
+    cum = jnp.cumsum(a_c, axis=-1)                                   # [b,c,h,l]
+    B_c = Bm.astype(f32).reshape(b, nc, chunk, g, n)
+    C_c = Cm.astype(f32).reshape(b, nc, chunk, g, n)
+    x_c = xd.reshape(b, nc, chunk, h, p)
+
+    # intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) xd_j
+    CB = jnp.einsum("bcign,bcjgn->bcgij", C_c, B_c)                  # [b,c,g,l,l]
+    CB = jnp.repeat(CB, hg, axis=2)                                  # [b,c,h,l,l]
+    diff = cum[..., :, None] - cum[..., None, :]                     # [b,c,h,i,j]
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: the upper triangle has positive exponents that
+    # overflow to inf, and where(tril, inf, 0) still propagates NaN grads.
+    decay = jnp.where(tril, jnp.exp(jnp.where(tril, diff, 0.0)), 0.0)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", CB * decay, x_c)      # [b,c,l,h,p]
+
+    # per-chunk state contribution: S_c = sum_j B_j (x)_j exp(cum_end - cum_j)
+    w_end = jnp.exp(cum[..., -1:] - cum)                             # [b,c,h,l]
+    B_h = jnp.repeat(B_c, hg, axis=3).reshape(b, nc, chunk, h, n)    # group->head
+    S_c = jnp.einsum("bclhn,bclhp,bchl->bchnp", B_h, x_c, w_end)     # [b,c,h,n,p]
+
+    chunk_decay = jnp.exp(cum[..., -1])                              # [b,c,h]
+
+    def step(S_prev, xs):
+        cd, Sc = xs                                                  # [b,h], [b,h,n,p]
+        S_out = S_prev
+        S_next = S_prev * cd[..., None, None] + Sc
+        return S_next, S_out
+
+    S0 = init_state.astype(f32) if init_state is not None else jnp.zeros((b, h, n, p), f32)
+    S_final, S_in = jax.lax.scan(
+        step, S0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S_c, 1, 0))
+    )
+    S_in = jnp.moveaxis(S_in, 0, 1)                                  # [b,c,h,n,p]
+
+    # inter-chunk: y_l += C_l . (S_in decayed to l) = C_l.S_in * exp(cum_l)
+    C_h = jnp.repeat(C_c, hg, axis=3).reshape(b, nc, chunk, h, n)
+    y_inter = jnp.einsum("bclhn,bchnp,bchl->bclhp", C_h, S_in, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), S_final
+
+
+def ssd_decode(
+    x: jnp.ndarray, dt: jnp.ndarray, A_log: jnp.ndarray,
+    Bm: jnp.ndarray, Cm: jnp.ndarray, state: jnp.ndarray,
+):
+    """Single-step recurrence.  x [b,h,p]; dt [b,h]; Bm/Cm [b,g,n];
+    state [b,h,n,p] -> (y [b,h,p], new_state)."""
+    h = x.shape[1]
+    hg = h // Bm.shape[1]
+    f32 = jnp.float32
+    a = jnp.exp(-jnp.exp(A_log.astype(f32)) * dt.astype(f32))        # [b,h]
+    B_h = jnp.repeat(Bm.astype(f32), hg, axis=1)                     # [b,h,n]
+    C_h = jnp.repeat(Cm.astype(f32), hg, axis=1)
+    xd = x.astype(f32) * dt.astype(f32)[..., None]                   # [b,h,p]
+    new_state = state * a[..., None, None] + B_h[..., None] * xd[:, :, None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", C_h, new_state)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    """xbc [b, s, ch]; w [W, ch] depthwise causal conv; silu activation."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(width):  # static, width=4
+        out = out + pad[:, i : i + xbc.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + bias.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def conv_decode(xbc: jnp.ndarray, conv_state: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray):
+    """xbc [b, ch] single step; conv_state [b, W-1, ch] (previous inputs).
+
+    Returns (activated [b, ch], new_conv_state)."""
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # [b, W, ch]
+    out = jnp.sum(window.astype(jnp.float32) * w.astype(jnp.float32)[None], axis=1)
+    y = jax.nn.silu(out + bias.astype(jnp.float32)).astype(xbc.dtype)
+    return y, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Block apply (full sequence / decode)
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    din, g, n, h = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_n_heads
+    z = proj[..., :din]
+    xbc = proj[..., din : 2 * din + 2 * g * n]
+    dt = proj[..., 2 * din + 2 * g * n :]
+    return z, xbc, dt
+
+
+def mamba_block(h: jnp.ndarray, lp: dict, cfg: ModelConfig,
+                init_state: Optional[jnp.ndarray] = None):
+    """Full-sequence Mamba2 block.  Returns (h_out, (conv_tail, ssm_state))."""
+    b, s, _ = h.shape
+    din, g, n, nh, p = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    xn = L.rms_norm(h, lp["ln"], cfg.rms_eps)
+    proj = jnp.einsum("bsd,dk->bsk", xn, lp["in_proj"].astype(xn.dtype))
+    proj = hint(proj, "dp", None, None)
+    z, xbc_raw, dt_raw = _split_proj(cfg, proj)
+    xbc = causal_conv(xbc_raw, lp["conv_w"], lp["conv_b"])
+    x = hint(xbc[..., :din].reshape(b, s, nh, p), "dp", None, "tp", None)
+    Bm = xbc[..., din : din + g * n].reshape(b, s, g, n)
+    Cm = xbc[..., din + g * n :].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])
+    y, state = ssd_chunked(x, dt, lp["A_log"], Bm, Cm, cfg.ssd_chunk, init_state)
+    y = y + x * lp["D_skip"].astype(jnp.float32)[None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, s, din)
+    y = L.rms_norm(y, lp["norm"], cfg.rms_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", y, lp["out_proj"].astype(y.dtype))
+    out = hint(out, "dp", None, None)
+    conv_tail = xbc_raw[:, -(cfg.conv_width - 1):, :]   # pre-conv inputs for decode
+    return h + out, (conv_tail, state)
+
+
+def mamba_block_decode(h: jnp.ndarray, lp: dict, cfg: ModelConfig,
+                       conv_state: jnp.ndarray, ssm_state: jnp.ndarray):
+    """Single-token Mamba2 block.  h [b, 1, d]."""
+    b = h.shape[0]
+    din, g, n, nh, p = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    xn = L.rms_norm(h, lp["ln"], cfg.rms_eps)[:, 0, :]
+    proj = jnp.einsum("bd,dk->bk", xn, lp["in_proj"].astype(xn.dtype))
+    z, xbc_raw, dt_raw = _split_proj(cfg, proj)
+    xbc, new_conv = conv_decode(xbc_raw, conv_state, lp["conv_w"], lp["conv_b"])
+    x = xbc[..., :din].reshape(b, nh, p)
+    Bm = xbc[..., din : din + g * n].reshape(b, g, n)
+    Cm = xbc[..., din + g * n :].reshape(b, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])
+    y, new_state = ssd_decode(x, dt, lp["A_log"], Bm, Cm, ssm_state)
+    y = y + x * lp["D_skip"].astype(jnp.float32)[None, :, None].astype(x.dtype)
+    y = y.reshape(b, din)
+    y = L.rms_norm(y, lp["norm"], cfg.rms_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bk,kd->bd", y, lp["out_proj"].astype(y.dtype))
+    return h + out[:, None, :], new_conv, new_state
+
+
+# ---------------------------------------------------------------------------
+# Model-level API (matches transformer.py's surface)
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, tokens, *, remat: bool = True,
+            emit_state: bool = False, use_tp=None):
+    with tp_policy(cfg.use_tp if use_tp is None else use_tp):
+        return _forward_inner(cfg, params, tokens, remat, emit_state)
+
+
+def _forward_inner(cfg, params, tokens, remat, emit_state):
+    cd = L.cdtype(cfg)
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+
+    def body(h, lp):
+        h2, states = mamba_block(h, lp, cfg)
+        return h2, states if emit_state else None
+
+    body = L.remat_wrap(body, remat)
+    unroll = cfg.n_layers if cfg.scan_unroll else 1
+    h, states = jax.lax.scan(body, h, params["blocks"], unroll=unroll)
+    hn = L.rms_norm(h, params["final_ln"], cfg.rms_eps)
+    w = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", hn, w.astype(hn.dtype)).astype(jnp.float32)
+    return logits, jnp.float32(0.0), states
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    cch = conv_channels(cfg)
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1, cch), dtype),
+        "ssm": jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_n_heads, cfg.ssm_state, cfg.ssm_head_dim),
+            jnp.float32,
+        ),
+    }
+
+
+def prefill(cfg: ModelConfig, params, tokens):
+    logits, _, states = forward(cfg, params, tokens, remat=False, emit_state=True,
+                                use_tp=cfg.use_tp_serve)
+    conv_tails, ssm_states = states                  # [L, b, W-1, cch], [L, b, h, n, p]
+    cache = {"conv": conv_tails, "ssm": ssm_states}
+    return logits[:, -1, :], cache, jnp.int32(tokens.shape[1])
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, pos):
+    with tp_policy(cfg.use_tp_serve):
+        return _decode_inner(cfg, params, token, cache, pos)
+
+
+def _decode_inner(cfg, params, token, cache, pos):
+    cd = L.cdtype(cfg)
+    h = jnp.take(params["embed"], token, axis=0).astype(cd)
+
+    def body(h, xs):
+        lp, conv_s, ssm_s = xs
+        h2, nc, ns = mamba_block_decode(h, lp, cfg, conv_s, ssm_s)
+        return h2, (nc, ns)
+
+    h, (nconv, nssm) = jax.lax.scan(body, h, (params["blocks"], cache["conv"], cache["ssm"]),
+                                    unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    hn = L.rms_norm(h, params["final_ln"], cfg.rms_eps)
+    w = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", hn, w.astype(hn.dtype)).astype(jnp.float32)[:, 0, :]
+    return logits, {"conv": nconv, "ssm": nssm}

@@ -1,0 +1,186 @@
+"""Dense / MoE decoder-only transformer (phi3, mistral-large, qwen2.5,
+smollm, grok-1, qwen2-moe, and the internvl2 LLM backbone).
+
+Layers are stacked on a leading axis and consumed by lax.scan (one compiled
+block body regardless of depth -- keeps dry-run HLO compact at 88 layers) with
+optional remat.  The same block code drives train (full sequence), prefill
+(emit KV) and decode (cache read/write at position).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import partition
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    out_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attention(k1, cfg, dtype, out_scale),
+    }
+    if cfg.family == "moe":
+        p["moe"] = M.init_moe(k2, cfg, dtype, out_scale)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg, dtype, out_scale)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kb, kh = jax.random.split(key, 3)
+    block_keys = jax.random.split(kb, cfg.n_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg, dtype))(block_keys)
+    params = {
+        "embed": L.dense_init(ke, (cfg.vocab, cfg.d_model), 0.02, dtype),
+        "blocks": blocks,
+        "final_ln": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(
+            kh, (cfg.d_model, cfg.vocab), 1.0 / math.sqrt(cfg.d_model), dtype
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _block_apply(h, lp, cfg: ModelConfig, positions, *, cache_slice=None, cache_pos=None):
+    """One transformer block.  Returns (h, emitted) where emitted is (k, v)
+    in full-sequence mode or the updated cache slice in decode mode."""
+    # Sequence-parallel residual stream (Megatron-SP): the scan carry / saved
+    # remat inputs shard S over "model", cutting per-layer saved activations
+    # 16x (mistral-large train: ~141 GB of bf16 carries otherwise).  GSPMD
+    # inserts the SP all-gather at attention/MLP entry -- same bytes as the
+    # TP all-reduce it replaces.  No-op when S % 16 != 0 or use_tp=False.
+    if cache_slice is None:
+        h = partition.hint(h, "dp", "tp", None)
+    a, emitted = L.attention_block(
+        L.rms_norm(h, lp["ln1"], cfg.rms_eps), lp["attn"], cfg, positions,
+        causal=True, cache=cache_slice, cache_pos=cache_pos,
+    )
+    h = h + a
+    hn = L.rms_norm(h, lp["ln2"], cfg.rms_eps)
+    if cfg.family == "moe":
+        m, aux = M.moe_ffn(hn, lp["moe"], cfg)
+    else:
+        m, aux = L.mlp_block(hn, lp["mlp"], cfg), jnp.float32(0.0)
+    return h + m, emitted, aux
+
+
+def _embed(cfg: ModelConfig, params, tokens, embeds_prefix=None):
+    cd = L.cdtype(cfg)
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    if embeds_prefix is not None:
+        h = jnp.concatenate([embeds_prefix.astype(cd), h], axis=1)
+    return partition.hint(h, "dp", None, None)
+
+
+def _head(cfg: ModelConfig, params, h):
+    h = L.rms_norm(h, params["final_ln"], cfg.rms_eps)
+    w = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype)).astype(jnp.float32)
+    return partition.hint(logits, "dp", None, "tp")
+
+
+# ---------------------------------------------------------------------------
+# Train / full-sequence forward
+# ---------------------------------------------------------------------------
+
+def forward(
+    cfg: ModelConfig, params, tokens: jnp.ndarray, *,
+    embeds_prefix: Optional[jnp.ndarray] = None, remat: bool = True,
+    emit_kv: bool = False, use_tp: Optional[bool] = None,
+):
+    """tokens [B, S] (+ optional prefix embeddings, e.g. image patches) ->
+    (logits [B, S_total, V], aux_loss, emitted kv or None)."""
+    with partition.tp_policy(cfg.use_tp if use_tp is None else use_tp):
+        return _forward_inner(cfg, params, tokens, embeds_prefix, remat, emit_kv)
+
+
+def _forward_inner(cfg, params, tokens, embeds_prefix, remat, emit_kv):
+    h = _embed(cfg, params, tokens, embeds_prefix)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(carry, lp):
+        h, aux = carry
+        h2, emitted, aux_l = _block_apply(h, lp, cfg, positions)
+        ys = emitted if emit_kv else None
+        return (h2, aux + aux_l), ys
+
+    body = L.remat_wrap(body, remat)
+    unroll = cfg.n_layers if cfg.scan_unroll else 1
+    (h, aux), kv = jax.lax.scan(body, (h, jnp.float32(0.0)), params["blocks"], unroll=unroll)
+    return _head(cfg, params, h), aux, kv
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cap: int, dtype=jnp.bfloat16) -> dict:
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (cfg.n_layers, batch, cap, kvh, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill(cfg: ModelConfig, params, tokens, *, cache_cap: Optional[int] = None,
+            embeds_prefix: Optional[jnp.ndarray] = None):
+    """Full-sequence forward emitting the KV cache.  Returns (last_logits
+    [B, V], cache, pos [])."""
+    logits, _, kv = forward(
+        cfg, params, tokens, embeds_prefix=embeds_prefix, remat=False, emit_kv=True,
+        use_tp=cfg.use_tp_serve,
+    )
+    ks, vs = kv                                      # [L, B, S, KV, hd]
+    s = ks.shape[2]
+    cap = cache_cap or s
+    if cap > s:
+        pad = [(0, 0), (0, 0), (0, cap - s), (0, 0), (0, 0)]
+        ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+    cache = {"k": ks.astype(jnp.bfloat16), "v": vs.astype(jnp.bfloat16)}
+    return logits[:, -1, :], cache, jnp.int32(s)
+
+
+def decode_step(cfg: ModelConfig, params, token: jnp.ndarray, cache: dict, pos: jnp.ndarray):
+    """One decode step.  token [B, 1] int32; pos [] int32 (current length).
+
+    Returns (logits [B, V], new_cache).  The cache is functionally updated
+    (donate it under jit for in-place aliasing).
+    """
+    with partition.tp_policy(cfg.use_tp_serve):
+        return _decode_inner(cfg, params, token, cache, pos)
+
+
+def _decode_inner(cfg, params, token, cache, pos):
+    h = _embed(cfg, params, token)
+    b = h.shape[0]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+
+    def body(h, xs):
+        lp, ck, cv = xs
+        h2, new_cache, _ = _block_apply(
+            h, lp, cfg, positions, cache_slice={"k": ck, "v": cv}, cache_pos=pos
+        )
+        return h2, (new_cache["k"], new_cache["v"])
+
+    h, (nk, nv) = jax.lax.scan(body, h, (params["blocks"], cache["k"], cache["v"]),
+                               unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    logits = _head(cfg, params, h)[:, 0, :]
+    return logits, {"k": nk, "v": nv}

@@ -1,0 +1,2 @@
+from repro.serve.engine import ServeEngine, ServeStats  # noqa: F401
+from repro.serve.retrieval import RetrievalService  # noqa: F401

@@ -1,0 +1,61 @@
+"""Batched serving engine: prefill + greedy/temperature decode over any
+registered architecture, with donated KV caches."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.registry import ModelApi
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_seconds: float = 0.0
+    decode_seconds: float = 0.0
+    tokens_generated: int = 0
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        return self.tokens_generated / max(self.decode_seconds, 1e-9)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, api: ModelApi, params, *, cache_cap: int = 512):
+        self.cfg, self.api, self.params = cfg, api, params
+        self.cache_cap = cache_cap
+        self._prefill = jax.jit(
+            functools.partial(api.prefill, cfg), static_argnames=("cache_cap",)
+        )
+        self._decode = jax.jit(functools.partial(api.decode_step, cfg), donate_argnums=(2,))
+
+    def generate(self, batch: dict, max_new_tokens: int, *, greedy: bool = True,
+                 temperature: float = 1.0, seed: int = 0) -> tuple[np.ndarray, ServeStats]:
+        stats = ServeStats()
+        t0 = time.time()
+        logits, cache, pos = self._prefill(self.params, batch, cache_cap=self.cache_cap)
+        logits.block_until_ready()
+        stats.prefill_seconds = time.time() - t0
+
+        key = jax.random.PRNGKey(seed)
+        outs = []
+        t0 = time.time()
+        for i in range(max_new_tokens):
+            if greedy:
+                tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            else:
+                key, sk = jax.random.split(key)
+                tok = jax.random.categorical(sk, logits / temperature, axis=-1)[:, None].astype(jnp.int32)
+            outs.append(np.asarray(tok))
+            logits, cache = self._decode(self.params, tok, cache, pos)
+            pos = pos + 1
+        jax.block_until_ready(logits)
+        stats.decode_seconds = time.time() - t0
+        stats.tokens_generated = max_new_tokens * outs[0].shape[0]
+        return np.concatenate(outs, axis=1), stats

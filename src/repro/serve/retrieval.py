@@ -1,0 +1,73 @@
+"""GENIE retrieval service: the paper's technique as a first-class serving
+feature.
+
+A RetrievalService wraps an embedding function (e.g. mean-pooled hidden
+states of any registered LM, or raw feature vectors), an LSH scheme, and a
+GenieIndex; `add`/`search` give τ-ANN document retrieval for
+retrieval-augmented serving (examples/serve_batch.py drives it at batch
+1024+, the paper's throughput regime).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GenieIndex, TopKMethod
+from repro.core.lsh import e2lsh, rbh, simhash, tau_ann
+
+
+@dataclasses.dataclass
+class RetrievalService:
+    embed_fn: Callable[[np.ndarray], np.ndarray]   # raw items -> [n, d] embeddings
+    scheme: str = "e2lsh"                          # e2lsh | rbh | simhash
+    eps: float = 0.06
+    delta: float = 0.06
+    n_buckets: int = 8192
+    w: float = 4.0
+    sigma: float = 1.0
+    seed: int = 0
+    m_override: Optional[int] = None
+
+    def __post_init__(self):
+        self.m = self.m_override or tau_ann.required_m(self.eps, self.delta)
+        self._params = None
+        self._index: Optional[GenieIndex] = None
+        self._items: list = []
+
+    def _make_params(self, d: int):
+        key = jax.random.PRNGKey(self.seed)
+        if self.scheme == "e2lsh":
+            return e2lsh.make(key, d=d, m=self.m, w=self.w, n_buckets=self.n_buckets)
+        if self.scheme == "rbh":
+            return rbh.make(key, d=d, m=self.m, sigma=self.sigma, n_buckets=self.n_buckets)
+        if self.scheme == "simhash":
+            return simhash.make(key, d=d, m=self.m)
+        raise ValueError(self.scheme)
+
+    def _hash(self, x: np.ndarray) -> jnp.ndarray:
+        mod = {"e2lsh": e2lsh, "rbh": rbh, "simhash": simhash}[self.scheme]
+        return mod.hash_points(self._params, jnp.asarray(x))
+
+    def add(self, items, embeddings: Optional[np.ndarray] = None) -> None:
+        emb = self.embed_fn(items) if embeddings is None else embeddings
+        if self._params is None:
+            self._params = self._make_params(emb.shape[-1])
+        sigs = self._hash(emb)
+        self._items = list(items)
+        self._index = GenieIndex.build_lsh(sigs, max_count=self.m)
+
+    def search(self, queries, k: int = 10, *, embeddings: Optional[np.ndarray] = None,
+               method: TopKMethod = TopKMethod.CPQ):
+        assert self._index is not None, "add() first"
+        emb = self.embed_fn(queries) if embeddings is None else embeddings
+        qsigs = self._hash(emb)
+        res = self._index.search(qsigs, k=k, method=method)
+        sims = tau_ann.mle_similarity(np.asarray(res.counts), self.m)   # Eqn 7
+        return res, sims
+
+    def items_for(self, result_ids: np.ndarray) -> list:
+        return [[self._items[int(i)] if i >= 0 else None for i in row] for row in result_ids]

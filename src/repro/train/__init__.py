@@ -1,0 +1,3 @@
+from repro.train import step, trainer  # noqa: F401
+from repro.train.step import TrainHParams, TrainState, init_state, make_train_step  # noqa: F401
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: F401

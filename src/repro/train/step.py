@@ -1,0 +1,104 @@
+"""Training step: loss, microbatch gradient accumulation, optional gradient
+compression, AdamW -- one jittable function per architecture."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.registry import IGNORE, ModelApi
+from repro.optim import adamw, compress, schedule
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: adamw.AdamWState
+    compress_error: Any        # None when compression is off
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    optimizer: adamw.AdamWConfig = adamw.AdamWConfig()
+    accum: int = 1                       # microbatch accumulation factor
+    aux_loss_weight: float = 0.01        # MoE load-balance loss
+    grad_compression: bool = False
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    remat: bool = True
+
+
+def init_state(cfg: ModelConfig, api: ModelApi, key, hp: TrainHParams) -> TrainState:
+    params = api.init_params(cfg, key)
+    err = compress.init_error(params) if hp.grad_compression else None
+    return TrainState(params=params, opt=adamw.init(params, hp.optimizer), compress_error=err)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray):
+    """Mean CE over non-IGNORE positions.  logits [B, S, V] fp32."""
+    mask = (labels != IGNORE).astype(jnp.float32)
+    safe = jnp.where(labels == IGNORE, 0, labels)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = (logz - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(ce) / denom, denom
+
+
+def make_loss_fn(cfg: ModelConfig, api: ModelApi, hp: TrainHParams):
+    def loss_fn(params, batch):
+        logits, aux, labels = api.train_logits(cfg, params, batch, remat=hp.remat)
+        ce, ntok = cross_entropy(logits, labels)
+        return ce + hp.aux_loss_weight * aux, dict(loss=ce, aux=aux, tokens=ntok)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, api: ModelApi, hp: TrainHParams):
+    """Returns train_step(state, batch) -> (state, metrics).  Jit with
+    donate_argnums=(0,) and the shardings from launch.sharding."""
+    loss_fn = make_loss_fn(cfg, api, hp)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return grads, metrics
+
+    def accumulate(params, batch):
+        if hp.accum == 1:
+            return single(params, batch)
+        split = lambda x: x.reshape((hp.accum, x.shape[0] // hp.accum) + x.shape[1:])
+        micro = jax.tree_util.tree_map(split, batch)
+
+        def body(carry, mb):
+            g_acc, m_acc = carry
+            g, m = single(params, mb)
+            g_acc = jax.tree_util.tree_map(lambda a, b: a + b, g_acc, g)
+            m_acc = jax.tree_util.tree_map(lambda a, b: a + b, m_acc, m)
+            return (g_acc, m_acc), None
+
+        g0 = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        m0 = dict(loss=jnp.float32(0), aux=jnp.float32(0), tokens=jnp.float32(0))
+        (grads, metrics), _ = jax.lax.scan(body, (g0, m0), micro)
+        scale = 1.0 / hp.accum
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        metrics = {k: v * (scale if k != "tokens" else 1.0) for k, v in metrics.items()}
+        return grads, metrics
+
+    def train_step(state: TrainState, batch):
+        grads, metrics = accumulate(state.params, batch)
+        err = state.compress_error
+        if hp.grad_compression:
+            grads, err = compress.apply(grads, err)
+        lr = schedule.cosine_with_warmup(
+            state.opt.step, peak_lr=hp.optimizer.lr,
+            warmup_steps=hp.warmup_steps, total_steps=hp.total_steps,
+        )
+        new_params, new_opt, gnorm = adamw.update(grads, state.opt, state.params, hp.optimizer, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr, step=new_opt.step)
+        return TrainState(params=new_params, opt=new_opt, compress_error=err), metrics
+
+    return train_step

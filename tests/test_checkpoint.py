@@ -1,0 +1,83 @@
+"""Checkpointing: atomic round-trip, bit-exact resume, pruning, elastic restore."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer
+from repro.data.pipeline import DataConfig
+from repro.models.registry import get_api, get_config
+from repro.optim.adamw import AdamWConfig
+from repro.train import Trainer, TrainerConfig, TrainHParams
+from repro.train import step as tsl
+
+
+def _trainer(ckpt_dir, total_steps, fail_injector=None, seed=0):
+    cfg = get_config("smollm-360m-smoke")
+    api = get_api(cfg)
+    # NOTE: hp.total_steps stays fixed across resume phases -- it defines the
+    # LR schedule, which must not change when a job restarts mid-run.
+    hp = TrainHParams(optimizer=AdamWConfig(lr=1e-3), total_steps=10, warmup_steps=2)
+    tc = TrainerConfig(total_steps=total_steps, ckpt_dir=ckpt_dir, ckpt_every=5,
+                       log_every=5, async_checkpoint=False, seed=seed)
+    data = DataConfig(global_batch=2, seq_len=32)
+    return Trainer(cfg, api, hp, tc, data, fail_injector=fail_injector)
+
+
+def test_save_restore_roundtrip(tmp_path):
+    cfg = get_config("smollm-360m-smoke")
+    api = get_api(cfg)
+    hp = TrainHParams()
+    state = tsl.init_state(cfg, api, jax.random.PRNGKey(0), hp)
+    checkpointer.save(str(tmp_path), 3, state, extra=dict(data_step=3))
+    assert checkpointer.latest_step(str(tmp_path)) == 3
+    restored, manifest = checkpointer.restore(str(tmp_path), 3, state)
+    assert manifest["extra"]["data_step"] == 3
+    for a, b in zip(jax.tree_util.tree_leaves(state), jax.tree_util.tree_leaves(restored)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_bit_exact(tmp_path):
+    """10 straight steps == 5 steps + save + restore + 5 steps."""
+    t1 = _trainer(None, 10)
+    t1.run()
+    straight = t1.final_state
+
+    d = str(tmp_path / "ck")
+    t2 = _trainer(d, 5)
+    t2.run()
+    t3 = _trainer(d, 10)
+    t3.run()  # resumes from step 5
+    resumed = t3.final_state
+    for a, b in zip(jax.tree_util.tree_leaves(straight.params),
+                    jax.tree_util.tree_leaves(resumed.params)):
+        assert np.allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_atomic_no_tmp_left(tmp_path):
+    cfg = get_config("smollm-360m-smoke")
+    api = get_api(cfg)
+    state = tsl.init_state(cfg, api, jax.random.PRNGKey(0), TrainHParams())
+    checkpointer.save(str(tmp_path), 1, state)
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_prune_keeps_latest(tmp_path):
+    cfg = get_config("smollm-360m-smoke")
+    api = get_api(cfg)
+    state = tsl.init_state(cfg, api, jax.random.PRNGKey(0), TrainHParams())
+    for s in (1, 2, 3, 4):
+        checkpointer.save(str(tmp_path), s, state)
+    checkpointer.prune(str(tmp_path), keep=2)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [3, 4]
+
+
+def test_async_checkpoint_joins(tmp_path):
+    cfg = get_config("smollm-360m-smoke")
+    api = get_api(cfg)
+    state = tsl.init_state(cfg, api, jax.random.PRNGKey(0), TrainHParams())
+    t = checkpointer.save(str(tmp_path), 7, state, async_=True)
+    t.join()
+    assert checkpointer.latest_step(str(tmp_path)) == 7

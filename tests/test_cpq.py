@@ -1,0 +1,116 @@
+"""c-PQ exactness (paper Theorem 3.1) and selection-method agreement."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cpq, merge, spq
+from repro.core.types import SearchParams
+
+
+def _sorted_counts(counts, k):
+    return np.sort(counts, axis=1)[:, ::-1][:, :k]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    q=st.integers(1, 4),
+    n=st.integers(1, 200),
+    mx=st.integers(1, 40),
+    k=st.integers(1, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cpq_matches_sort_topk(q, n, mx, k, seed):
+    counts = np.random.default_rng(seed).integers(0, mx + 1, size=(q, n)).astype(np.int32)
+    p = SearchParams(k=k, max_count=mx)
+    res = cpq.cpq_select(jnp.asarray(counts), p)
+    want = _sorted_counts(counts, k)
+    got = np.asarray(res.counts)
+    kk = min(k, n)
+    assert np.array_equal(got[:, :kk], want[:, :kk])
+    if n < k:  # padding contract
+        assert np.all(got[:, n:] == -1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    mx=st.integers(1, 30),
+    k=st.integers(1, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_threshold_is_kth_count(n, mx, k, seed):
+    """Theorem 3.1: AT - 1 == MC_k (count of the k-th object)."""
+    counts = np.random.default_rng(seed).integers(0, mx + 1, size=(2, n)).astype(np.int32)
+    p = SearchParams(k=k, max_count=mx)
+    res = cpq.cpq_select(jnp.asarray(counts), p)
+    if n >= k:
+        kth = np.sort(counts, axis=1)[:, ::-1][:, k - 1]
+        assert np.array_equal(np.asarray(res.threshold), kth)
+
+
+def test_returned_ids_have_returned_counts(rng):
+    counts = rng.integers(0, 20, size=(3, 500)).astype(np.int32)
+    p = SearchParams(k=9, max_count=20)
+    res = cpq.cpq_select(jnp.asarray(counts), p)
+    ids, vals = np.asarray(res.ids), np.asarray(res.counts)
+    for qi in range(3):
+        assert np.array_equal(counts[qi, ids[qi]], vals[qi])
+        # non-increasing
+        assert np.all(np.diff(vals[qi]) <= 0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 200),
+    mx=st.integers(1, 25),
+    k=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spq_matches_sort(n, mx, k, seed):
+    counts = np.random.default_rng(seed).integers(0, mx + 1, size=(2, n)).astype(np.int32)
+    p = SearchParams(k=k, max_count=mx)
+    res = spq.spq_select(jnp.asarray(counts), p)
+    want = _sorted_counts(counts, min(k, n))
+    assert np.array_equal(np.asarray(res.counts)[:, : min(k, n)], want)
+
+
+def test_gate_audit_threshold_properties(rng):
+    """ZA[AT] < k <= ZA[AT-1] (Lemma 3.1)."""
+    counts = rng.integers(0, 15, size=(4, 300)).astype(np.int32)
+    hist = cpq.count_histogram(jnp.asarray(counts), 15)
+    za = np.asarray(cpq.zipper_array(hist))
+    at, thr = cpq.audit_threshold(hist, 7)
+    at = np.asarray(at)
+    for qi in range(4):
+        if at[qi] <= 15:
+            assert za[qi, at[qi]] < 7
+        assert za[qi, at[qi] - 1] >= 7
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    parts=st.integers(1, 5),
+    n_per=st.integers(1, 60),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_merge_equals_global_topk(parts, n_per, k, seed):
+    """Merging per-part top-k == top-k of the union (multiload correctness)."""
+    rng = np.random.default_rng(seed)
+    q = 3
+    all_counts = rng.integers(0, 30, size=(q, parts * n_per)).astype(np.int32)
+    per_ids, per_counts = [], []
+    for pi in range(parts):
+        seg = all_counts[:, pi * n_per : (pi + 1) * n_per]
+        p = SearchParams(k=k, max_count=30)
+        r = cpq.cpq_select(jnp.asarray(seg), p)
+        per_ids.append(np.where(np.asarray(r.ids) >= 0, np.asarray(r.ids) + pi * n_per, -1))
+        per_counts.append(np.asarray(r.counts))
+    res = merge.merge_topk(jnp.asarray(np.stack(per_ids)), jnp.asarray(np.stack(per_counts)), k)
+    kk = min(k, parts * n_per)
+    want = _sorted_counts(all_counts, kk)
+    assert np.array_equal(np.asarray(res.counts)[:, :kk], want)
+    # tree merge agrees
+    res2 = merge.tree_merge(jnp.asarray(np.stack(per_ids)), jnp.asarray(np.stack(per_counts)), k)
+    assert np.array_equal(np.asarray(res.counts), np.asarray(res2.counts))

@@ -1,0 +1,73 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(1, 5, 3), (3, 130, 17), (8, 300, 64), (5, 257, 33)]  # (Q, N, m)
+
+
+@pytest.mark.parametrize("q,n,m", SHAPES)
+@pytest.mark.parametrize("dtype", [np.int32, np.int16])
+def test_match_count_sweep(q, n, m, dtype, rng):
+    d = rng.integers(0, 9, size=(n, m)).astype(dtype)
+    s = rng.integers(0, 9, size=(q, m)).astype(dtype)
+    got = np.asarray(ops.match_count(jnp.asarray(d), jnp.asarray(s), tile_q=8, tile_n=128))
+    want = np.asarray(ref.match_eq(jnp.asarray(d.astype(np.int32)), jnp.asarray(s.astype(np.int32))))
+    assert got.shape == (q, n)
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("q,n,d", [(2, 100, 5), (4, 300, 14), (1, 129, 31)])
+def test_range_count_sweep(q, n, d, rng):
+    x = rng.integers(0, 64, size=(n, d)).astype(np.int32)
+    lo = rng.integers(0, 48, size=(q, d)).astype(np.int32)
+    hi = lo + rng.integers(0, 20, size=(q, d)).astype(np.int32)
+    got = np.asarray(ops.range_count(jnp.asarray(x), jnp.asarray(lo), jnp.asarray(hi),
+                                     tile_q=8, tile_n=128))
+    want = np.asarray(ref.match_range(jnp.asarray(x), jnp.asarray(lo), jnp.asarray(hi)))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("q,n,v", [(2, 90, 64), (3, 260, 200), (1, 40, 513)])
+@pytest.mark.parametrize("dtype", [np.int32, np.int8])
+def test_minsum_count_sweep(q, n, v, dtype, rng):
+    dc = rng.integers(0, 4, size=(n, v)).astype(dtype)
+    qc = rng.integers(0, 4, size=(q, v)).astype(dtype)
+    got = np.asarray(ops.minsum_count(jnp.asarray(dc), jnp.asarray(qc),
+                                      tile_q=8, tile_n=128, tile_v=128))
+    want = np.asarray(ref.match_minsum(jnp.asarray(dc.astype(np.int32)),
+                                       jnp.asarray(qc.astype(np.int32))))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("q,n,v", [(2, 90, 64), (4, 300, 256)])
+def test_ip_count_sweep(q, n, v, rng):
+    db = (rng.random((n, v)) < 0.3).astype(np.int8)
+    qb = (rng.random((q, v)) < 0.3).astype(np.int8)
+    got = np.asarray(ops.ip_count(jnp.asarray(db), jnp.asarray(qb),
+                                  tile_q=8, tile_n=128, tile_v=128))
+    want = np.asarray(ref.match_ip(jnp.asarray(db), jnp.asarray(qb)))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("q,n,mx", [(2, 100, 9), (4, 513, 31), (8, 64, 127)])
+def test_cpq_hist_sweep(q, n, mx, rng):
+    counts = rng.integers(0, mx + 1, size=(q, n)).astype(np.int32)
+    got = np.asarray(ops.cpq_hist(jnp.asarray(counts), mx, tile_q=8, tile_n=128))
+    want = np.asarray(ref.cpq_hist(jnp.asarray(counts), mx + 1))
+    assert np.array_equal(got, want)
+    assert got.sum(axis=1).max() <= n
+
+
+def test_kernel_vs_engine_end_to_end(rng):
+    """GenieIndex with kernels on == engines off produce identical results."""
+    from repro.core import GenieIndex
+
+    sigs = rng.integers(0, 16, size=(300, 24)).astype(np.int32)
+    qs = rng.integers(0, 16, size=(5, 24)).astype(np.int32)
+    a = GenieIndex.build_lsh(sigs, use_kernel=True).search(qs, k=7)
+    b = GenieIndex.build_lsh(sigs, use_kernel=False).search(qs, k=7)
+    assert np.array_equal(np.asarray(a.counts), np.asarray(b.counts))
+    assert np.array_equal(np.asarray(a.threshold), np.asarray(b.threshold))

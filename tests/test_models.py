@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests (reduced configs, deliverable f) and
+decode/forward consistency for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models import layers as L
+from repro.models.registry import get_api, get_config, list_archs
+from repro.optim.adamw import AdamWConfig
+from repro.train import step as tsl
+
+SMOKE_ARCHS = [a for a in list_archs() if a.endswith("-smoke")]
+assert len(SMOKE_ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", SMOKE_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """One forward + one train step on CPU: output shapes + no NaNs."""
+    cfg = get_config(arch)
+    api = get_api(cfg)
+    hp = tsl.TrainHParams(optimizer=AdamWConfig(lr=1e-3), total_steps=2, warmup_steps=1)
+    state = tsl.init_state(cfg, api, jax.random.PRNGKey(0), hp)
+    batch = SyntheticTokens(cfg, DataConfig(global_batch=2, seq_len=32)).batch(0)
+
+    logits, aux, labels = api.train_logits(cfg, state.params, batch, remat=False)
+    b = batch["tokens"].shape[0]
+    s_total = logits.shape[1]
+    assert logits.shape == (b, s_total, cfg.vocab)
+    assert labels.shape == (b, s_total)
+    assert not bool(jnp.isnan(logits).any())
+
+    step = jax.jit(tsl.make_train_step(cfg, api, hp), donate_argnums=(0,))
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+
+
+@pytest.mark.parametrize("arch", [
+    "phi3-mini-3.8b-smoke", "mamba2-1.3b-smoke", "zamba2-2.7b-smoke",
+    "qwen2-moe-a2.7b-smoke", "internvl2-76b-smoke", "seamless-m4t-large-v2-smoke",
+])
+def test_decode_matches_forward(arch):
+    """prefill + decode_step logits == teacher-forced forward at that position."""
+    import dataclasses
+
+    cfg = get_config(arch)
+    if cfg.family == "moe":  # capacity dropping is population-dependent
+        cfg = dataclasses.replace(cfg, capacity_factor=64.0)
+    api = get_api(cfg)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = SyntheticTokens(cfg, DataConfig(global_batch=2, seq_len=16)).batch(0)
+
+    last, cache, pos = api.prefill(cfg, params, batch, cache_cap=32)
+    nt = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    step_logits, _ = api.decode_step(cfg, params, nt, cache, pos)
+
+    batch2 = dict(batch)
+    toks = jnp.asarray(batch["tokens"])
+    pad = jnp.zeros((toks.shape[0], 7), jnp.int32)  # pad to ssd-chunk multiple
+    batch2["tokens"] = jnp.concatenate([toks, nt, pad], axis=1)
+    if cfg.family == "audio":
+        f = jnp.asarray(batch["frames"])
+        batch2["frames"] = f
+    full_logits, _, _ = api.train_logits(cfg, params, batch2, remat=False)
+    at = full_logits.shape[1] - 8 - (0 if cfg.family != "vlm" else 0)
+    pos_idx = int(np.asarray(pos)) if cfg.family != "vlm" else toks.shape[1] + cfg.n_patches
+    want = full_logits[:, pos_idx, :] if cfg.family == "vlm" else full_logits[:, at, :]
+    err = float(jnp.abs(step_logits - want).max())
+    assert err < 5e-2, (arch, err)
+
+
+def test_chunked_attention_exact():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 1024, 4, 16))
+    k = jax.random.normal(ks[1], (2, 1024, 2, 16))
+    v = jax.random.normal(ks[2], (2, 1024, 2, 16))
+    for causal in (True, False):
+        a = L.chunked_attention(q, k, v, causal=causal, q_chunk=256, k_chunk=512)
+        b = L.full_attention(q, k, v, causal=causal)
+        assert float(jnp.abs(a - b).max()) < 1e-5
+
+
+def test_attention_softcap():
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, 8, 2, 8)) * 10
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 2, 8)) * 10
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 8, 2, 8))
+    a = L.full_attention(q, k, v, causal=True, softcap=30.0)
+    assert not bool(jnp.isnan(a).any())
+
+
+def test_param_counts_match_published_sizes():
+    """Analytic parameter counts are within 10% of the published sizes."""
+    expect = {
+        "phi3-mini-3.8b": 3.8e9, "mistral-large-123b": 123e9, "qwen2.5-14b": 14.8e9,
+        "smollm-360m": 0.36e9, "mamba2-1.3b": 1.3e9, "qwen2-moe-a2.7b": 14.3e9,
+        "grok-1-314b": 314e9, "internvl2-76b": 70e9,
+    }
+    for arch, want in expect.items():
+        got = get_config(arch).param_count()
+        assert abs(got - want) / want < 0.12, (arch, got, want)
+
+
+def test_moe_active_params_fraction():
+    cfg = get_config("qwen2-moe-a2.7b")
+    assert cfg.active_param_count() < 0.35 * cfg.param_count()

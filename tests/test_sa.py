@@ -1,0 +1,133 @@
+"""Shotgun-and-Assembly search (paper section V): n-grams, verification,
+documents, relational."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GenieIndex, match
+from repro.core.sa import document, ngram, relational, verify
+
+SEQ = st.text(alphabet="abcd", min_size=0, max_size=24)
+
+
+@settings(max_examples=40, deadline=None)
+@given(s=SEQ, q=SEQ)
+def test_minsum_count_vectors_equal_exact_mc_when_no_collisions(s, q):
+    """Lemma 5.1 via count vectors: with a large bucket space (no collisions
+    among these tiny alphabets), MINSUM == exact ordered-n-gram match count."""
+    n, v = 3, 1 << 16
+    cs = ngram.count_vector(s, n, v)
+    cq = ngram.count_vector(q, n, v)
+    got = int(np.minimum(cs, cq).sum())
+    assert got == ngram.exact_match_count(s, q, n)
+
+
+@settings(max_examples=40, deadline=None)
+@given(s=SEQ, q=SEQ, v=st.integers(4, 64))
+def test_bucketised_mc_upper_bounds_exact(s, q, v):
+    """min(a1+a2, b1+b2) >= min(a1,b1)+min(a2,b2): bucket collisions can only
+    OVER-count, so the Theorem 5.1 filter never loses a true candidate."""
+    n = 3
+    cs = ngram.count_vector(s, n, v)
+    cq = ngram.count_vector(q, n, v)
+    assert int(np.minimum(cs, cq).sum()) >= ngram.exact_match_count(s, q, n)
+
+
+@settings(max_examples=30, deadline=None)
+@given(s=SEQ, q=SEQ)
+def test_count_filter_bound_theorem51(s, q):
+    """Theorem 5.1: MC >= max(|Q|,|S|) - n + 1 - ed*n."""
+    n = 2
+    if len(s) < n or len(q) < n:
+        return
+    import numpy as _np
+
+    def ed(a, b):
+        la, lb = len(a), len(b)
+        dmat = _np.zeros((lb + 1, la + 1), dtype=int)
+        dmat[0, :] = _np.arange(la + 1)
+        dmat[:, 0] = _np.arange(lb + 1)
+        for j in range(1, lb + 1):
+            for i in range(1, la + 1):
+                dmat[j, i] = min(dmat[j - 1, i - 1] + (a[i - 1] != b[j - 1]),
+                                 dmat[j, i - 1] + 1, dmat[j - 1, i] + 1)
+        return dmat[lb, la]
+
+    mc = ngram.exact_match_count(s, q, n)
+    bound = ngram.count_filter_bound(len(q), len(s), ed(s, q), n)
+    assert mc >= bound
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    la=st.integers(0, 14), lb=st.integers(0, 14), seed=st.integers(0, 10**6)
+)
+def test_edit_distance_property(la, lb, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 4, la)
+    b = rng.integers(0, 4, lb)
+    L = 16
+    ap = np.full(L, -1, np.int32); ap[:la] = a
+    bp = np.full(L, -2, np.int32); bp[:lb] = b
+    got = int(verify.edit_distance(jnp.asarray(ap), jnp.int32(la), jnp.asarray(bp), jnp.int32(lb)))
+    # reference
+    d = np.zeros((lb + 1, la + 1), dtype=int)
+    d[0, :] = np.arange(la + 1); d[:, 0] = np.arange(lb + 1)
+    for j in range(1, lb + 1):
+        for i in range(1, la + 1):
+            d[j, i] = min(d[j - 1, i - 1] + (a[i - 1] != b[j - 1]), d[j, i - 1] + 1, d[j - 1, i] + 1)
+    assert got == d[lb, la]
+
+
+def test_sequence_search_end_to_end(rng):
+    """Mutated query finds its source sequence; certificate checks out."""
+    from repro.data.pipeline import mutate_sequence, synthetic_sequences
+
+    seqs = synthetic_sequences(300, length=40, seed=1)
+    n, v, K = 3, 4096, 32
+    idx = GenieIndex.build_minsum(ngram.count_vectors(seqs, n, v), max_count=127)
+    target = 17
+    qstr = mutate_sequence(seqs[target], 0.2, seed=2)
+    qv = ngram.count_vector(qstr, n, v)[None]
+    res = idx.search(qv, k=K)
+    cand_ids = np.asarray(res.ids[0])
+    assert target in cand_ids[:K]
+    # verification: edit distance picks the target as top-1
+    enc, lens = ngram.encode_sequences([seqs[i] if i >= 0 else "" for i in cand_ids], 48)
+    qenc, qlen = ngram.encode_sequences([qstr], 48)
+    out = verify.verify_topk(
+        jnp.asarray(qenc[0]), jnp.int32(qlen[0]), jnp.asarray(enc), jnp.asarray(lens),
+        jnp.asarray(np.asarray(res.counts[0])), k=1, n=n,
+    )
+    best = int(np.asarray(out["order"])[0])
+    assert int(cand_ids[best]) == target
+
+
+def test_document_search_inner_product(rng):
+    docs = ["the cat sat on the mat", "dogs chase cats", "jax on tpu pods",
+            "inverted index similarity search", "cat and dog and bird"]
+    v = 2048
+    idx = GenieIndex.build_ip(document.binary_vectors(docs, v), max_count=64)
+    q = document.binary_vectors(["cat dog"], v)
+    res = idx.search(q, k=2)
+    counts = np.asarray(res.counts[0])
+    # oracle overlaps
+    want = sorted((document.exact_overlap("cat dog", d) for d in docs), reverse=True)[:2]
+    assert list(counts) == want
+
+
+def test_relational_range_search(rng):
+    vals = rng.standard_normal((400, 6))
+    disc = relational.fit_discretizer(vals, n_bins=1024)
+    dv = disc.transform(vals)
+    idx = GenieIndex.build_relational(dv)
+    lo, hi = relational.point_range_queries(dv[:3], radius=50)
+    res = idx.search((lo, hi), k=1)
+    # the tuple itself always matches all its own attributes
+    assert np.all(np.asarray(res.counts)[:, 0] == 6)
+    assert np.array_equal(np.asarray(res.ids)[:, 0], np.arange(3))
+    # oracle agreement
+    want = relational.exact_range_count(dv, lo, hi)
+    got = np.asarray(match.match_range(jnp.asarray(dv), jnp.asarray(lo), jnp.asarray(hi)))
+    assert np.array_equal(got, want)

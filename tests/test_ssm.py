@@ -1,0 +1,87 @@
+"""SSD (Mamba2) correctness: chunked scan == naive recurrence; decode
+continuation; conv state handoff."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ssm
+
+
+def _ssd_ref(x, dt, A_log, B, C):
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    S = np.zeros((b, h, n, p))
+    ys = np.zeros((b, s, h, p))
+    a = -np.exp(np.asarray(A_log, np.float64)) * np.asarray(dt, np.float64)
+    Bh = np.repeat(np.asarray(B, np.float64), hg, axis=2)
+    Ch = np.repeat(np.asarray(C, np.float64), hg, axis=2)
+    xd = np.asarray(x, np.float64) * np.asarray(dt, np.float64)[..., None]
+    for t in range(s):
+        S = S * np.exp(a[:, t])[..., None, None] + Bh[:, t][..., None] * xd[:, t][:, :, None, :]
+        ys[:, t] = np.einsum("bhn,bhnp->bhp", Ch[:, t], S)
+    return ys, S
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+@pytest.mark.parametrize("g", [1, 2])
+def test_ssd_chunked_matches_recurrence(chunk, g, rng):
+    b, s, h, p, n = 2, 32, 4, 8, 16
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((b, s, h)), jnp.float32))
+    A_log = jnp.asarray(rng.standard_normal(h) * 0.5, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, g, n)) * 0.3, jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, g, n)) * 0.3, jnp.float32)
+    y, S = ssm.ssd_chunked(x, dt, A_log, B, C, chunk=chunk)
+    yr, Sr = _ssd_ref(x, dt, A_log, B, C)
+    assert np.abs(np.asarray(y) - yr).max() < 1e-4
+    assert np.abs(np.asarray(S) - Sr).max() < 1e-4
+
+
+def test_ssd_decode_continues_chunked_state(rng):
+    b, s, h, p, g, n = 1, 24, 2, 4, 1, 8
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((b, s, h)), jnp.float32))
+    A_log = jnp.asarray(rng.standard_normal(h) * 0.5, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, g, n)) * 0.3, jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, g, n)) * 0.3, jnp.float32)
+    _, S16 = ssm.ssd_chunked(x[:, :16], dt[:, :16], A_log, B[:, :16], C[:, :16], chunk=8)
+    Sd = S16
+    for t in range(16, 24):
+        yd, Sd = ssm.ssd_decode(x[:, t], dt[:, t], A_log, B[:, t], C[:, t], Sd)
+    _, Sfull = ssm.ssd_chunked(x, dt, A_log, B, C, chunk=8)
+    assert np.abs(np.asarray(Sd) - np.asarray(Sfull)).max() < 1e-4
+    # y at final step matches a one-shot run's implied output
+    yr, _ = _ssd_ref(x, dt, A_log, B, C)
+    assert np.abs(np.asarray(yd) - yr[:, -1]).max() < 1e-4
+
+
+def test_ssd_init_state_resume(rng):
+    """ssd_chunked(init_state=S) == continuing the same sequence."""
+    b, s, h, p, g, n = 1, 32, 2, 4, 1, 8
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((b, s, h)), jnp.float32))
+    A_log = jnp.asarray(rng.standard_normal(h) * 0.5, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, g, n)) * 0.3, jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, g, n)) * 0.3, jnp.float32)
+    y_full, S_full = ssm.ssd_chunked(x, dt, A_log, B, C, chunk=8)
+    _, S_half = ssm.ssd_chunked(x[:, :16], dt[:, :16], A_log, B[:, :16], C[:, :16], chunk=8)
+    y2, S2 = ssm.ssd_chunked(
+        x[:, 16:], dt[:, 16:], A_log, B[:, 16:], C[:, 16:], chunk=8, init_state=S_half
+    )
+    assert np.abs(np.asarray(S2) - np.asarray(S_full)).max() < 1e-4
+    assert np.abs(np.asarray(y2) - np.asarray(y_full[:, 16:])).max() < 1e-4
+
+
+def test_causal_conv_matches_decode(rng):
+    b, s, ch, w = 2, 10, 6, 4
+    xbc = jnp.asarray(rng.standard_normal((b, s, ch)), jnp.float32)
+    wgt = jnp.asarray(rng.standard_normal((w, ch)) * 0.5, jnp.float32)
+    bias = jnp.asarray(rng.standard_normal(ch) * 0.1, jnp.float32)
+    full = ssm.causal_conv(xbc, wgt, bias)
+    # replay step-by-step
+    state = jnp.zeros((b, w - 1, ch))
+    for t in range(s):
+        y, state = ssm.conv_decode(xbc[:, t], state, wgt, bias)
+        assert np.abs(np.asarray(y) - np.asarray(full[:, t])).max() < 1e-5

@@ -1,5 +1,5 @@
-"""GENIE quickstart: build an LSH inverted index, run a batched tau-ANN
-search, and inspect the c-PQ guarantees.
+"""GENIE quickstart: build an inverted index through the MatchModel registry,
+run a batched tau-ANN search, and inspect the c-PQ guarantees.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,31 +7,42 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GenieIndex, TopKMethod
-from repro.core.lsh import e2lsh, tau_ann
+from repro.core import Engine, GenieIndex, TopKMethod, engines
+from repro.core import lsh as lsh_lib
+from repro.core.lsh import tau_ann
 from repro.data.pipeline import synthetic_points
 
 
 def main():
+    # 0. the registry is the system's single dispatch point: every engine is
+    #    one descriptor, every search path resolves through it
+    print("registered engines:",
+          ", ".join(e.value for e in engines.available()))
+    print("registered LSH schemes:", ", ".join(lsh_lib.scheme_names()))
+
     # 1. data: 20K clustered points (SIFT-like stand-in)
     pts, _ = synthetic_points(20_000, dim=32, n_clusters=64, seed=0)
 
-    # 2. LSH transform: the paper's practical m (Fig 8) at eps = delta = 0.06
+    # 2. LSH transform via the scheme registry: the paper's practical m
+    #    (Fig 8) at eps = delta = 0.06
     m = tau_ann.required_m(0.06, 0.06)
     print(f"hash functions m = {m} (paper: 237; Theorem 4.1 bound: "
           f"{tau_ann.m_theorem41(0.06, 0.06)})")
-    params = e2lsh.make(jax.random.PRNGKey(0), d=32, m=m, w=4.0, n_buckets=67)
-    sigs = e2lsh.hash_points(params, jnp.asarray(pts))
+    scheme = lsh_lib.get_scheme("e2lsh")
+    params = scheme.make_params(jax.random.PRNGKey(0), d=32, m=m, w=4.0, n_buckets=67)
+    sigs = scheme.hash_points(params, jnp.asarray(pts))
 
-    # 3. build the index (device-resident signature matrix)
-    index = GenieIndex.build_lsh(sigs, use_kernel=False)
+    # 3. build the index: the generic registry builder (named aliases like
+    #    build_lsh remain as thin wrappers)
+    index = GenieIndex.build(Engine.EQ, sigs, use_kernel=False)
     print(f"index: {index.stats.n_objects} objects, "
-          f"{index.stats.bytes_device/1e6:.1f} MB on device")
+          f"{index.stats.bytes_device/1e6:.1f} MB on device "
+          f"(engine={index.stats.extra['engine']})")
 
     # 4. batched search: 128 noisy queries
     rng = np.random.default_rng(1)
     q = pts[:128] + rng.standard_normal((128, 32)).astype(np.float32) * 0.1
-    qsigs = e2lsh.hash_points(params, jnp.asarray(q))
+    qsigs = scheme.hash_points(params, jnp.asarray(q))
     res = index.search(qsigs, k=10, method=TopKMethod.CPQ)
 
     hit = float(np.mean(np.asarray(res.ids)[:, 0] == np.arange(128)))
@@ -39,6 +50,12 @@ def main():
     print(f"MC_k threshold (Theorem 3.1, AT-1) for query 0: {int(res.threshold[0])}")
     sims = tau_ann.mle_similarity(np.asarray(res.counts[:1]), m)
     print(f"similarity estimates (Eqn 7) for query 0: {np.round(sims, 3)}")
+
+    # 5. the same index streamed as 4 parts (paper section III-D) -- identical
+    #    counts, any registered engine
+    parts = index.search_multiload(qsigs, k=10, n_parts=4)
+    same = bool(np.array_equal(np.asarray(res.counts), np.asarray(parts.counts)))
+    print(f"multiload(4 parts) counts identical: {same}")
 
 
 if __name__ == "__main__":

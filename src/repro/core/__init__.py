@@ -1,6 +1,11 @@
 # The paper's primary contribution: GENIE generic inverted-index similarity
 # search (match-count model, c-PQ selection, LSH/SA transforms, distributed
-# merge).  See DESIGN.md for the GPU->TPU adaptation map.
-from repro.core import cpq, distributed, index, match, merge, multiload, postings, spq  # noqa: F401
+# merge).  Engine dispatch lives in the MatchModel registry (core/engines.py);
+# top-k selection is the shared select_topk pipeline (core/select.py).
+from repro.core import (  # noqa: F401
+    cpq, distributed, engines, index, match, merge, multiload, postings, select, spq,
+)
+from repro.core.engines import MatchModel  # noqa: F401
 from repro.core.index import GenieIndex  # noqa: F401
+from repro.core.select import select_topk  # noqa: F401
 from repro.core.types import Engine, SearchParams, TopKMethod, TopKResult  # noqa: F401

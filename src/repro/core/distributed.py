@@ -1,12 +1,18 @@
 """Distributed GENIE search over a (pod, data, model) TPU mesh.
 
 Objects are partitioned across *every* mesh axis (a pure data-parallel object
-shard -- the match-count of an object depends only on its own signatures),
-queries are replicated, each shard runs the dense match + c-PQ select on its
-local partition, and the per-shard Hash-Table buffers are merged with an
-all-gather + small-buffer select (core/merge.py).  This is the paper's
+shard -- the match-count of an object depends only on its own data row),
+queries are replicated, each shard runs the dense match + shared `select_topk`
+on its local partition, and the per-shard Hash-Table buffers are merged with
+an all-gather + small-buffer select (core/merge.py).  This is the paper's
 multiple-loading merge turned into a collective, and is the `search_step`
 lowered by the multi-pod dry-run.
+
+Engines are resolved through the MatchModel registry (core/engines.py): pass
+an `Engine`, its string value, a `MatchModel`, or a raw canonical callable
+``fn(data, queries) -> counts`` -- all four registered engines (EQ, RANGE,
+MINSUM, IP) shard identically because the canonical signature hides the query
+pytree shape (RANGE replicates its (lo, hi) pair).
 
 Communication cost per query batch: S * Q * k * 8 bytes of (id, count) pairs
 -- independent of N, the point of shipping candidate buffers instead of
@@ -14,46 +20,76 @@ counts.
 """
 from __future__ import annotations
 
-import functools
-import math
-from typing import Callable
+from typing import Any, Callable, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
-from repro.core import cpq as _cpq
+from repro.core import engines as _engines
 from repro.core import merge as _merge
-from repro.core.types import SearchParams, TopKResult
+from repro.core.select import select_topk
+from repro.core.types import Engine, SearchParams, TopKResult
+
+# jax >= 0.6 promotes shard_map to the top level (keyword `check_vma`);
+# earlier releases keep it in jax.experimental (keyword `check_rep`).
+try:
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+
+    _CHECK_KW = "check_vma"
+except ImportError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+MatchLike = Union[Engine, str, "_engines.MatchModel",
+                  Callable[[jnp.ndarray, Any], jnp.ndarray]]
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """Version-portable shard_map with replication checking disabled."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: False})
+
+
+def _axis_size(name: str) -> jnp.ndarray:
+    # jax.lax.axis_size is newer-jax; psum(1) is its portable equivalent
+    # (constant-folded at trace time).
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
 
 
 def shard_linear_index(axes: tuple[str, ...]) -> jnp.ndarray:
     """Linearised shard index over the given mesh axes (row-major)."""
     idx = jnp.int32(0)
     for name in axes:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        idx = idx * _axis_size(name) + jax.lax.axis_index(name)
     return idx
+
+
+def _out_specs() -> TopKResult:
+    return TopKResult(ids=P(None, None), counts=P(None, None), threshold=P(None))
 
 
 def make_search_step(
     mesh: jax.sharding.Mesh,
     params: SearchParams,
-    match_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
-) -> Callable[[jnp.ndarray, jnp.ndarray], TopKResult]:
+    match_fn: MatchLike,
+) -> Callable[[jnp.ndarray, Any], TopKResult]:
     """Build the jittable distributed search step.
 
-    data_sigs: [N, m] (N divisible by the total mesh size; sharded dim 0).
-    query_sigs: [Q, m] replicated.
+    data:    [N, ...] (N divisible by the total mesh size; sharded dim 0).
+    queries: canonical query pytree, replicated (each leaf [Q, ...]).
     Returns replicated TopKResult with global object ids.
     """
     axes = tuple(mesh.axis_names)
-    n_shards = math.prod(mesh.devices.shape)
+    match = _engines.resolve_match_fn(match_fn)
 
-    def _local(data_local: jnp.ndarray, queries: jnp.ndarray) -> TopKResult:
+    def _local(data_local: jnp.ndarray, queries: Any) -> TopKResult:
         n_local = data_local.shape[0]
-        counts = match_fn(data_local, queries)
-        local = _cpq.cpq_select(counts, params)
+        counts = match(data_local, queries)
+        local = select_topk(counts, params)
         shard = shard_linear_index(axes)
         gids = jnp.where(local.ids >= 0, local.ids + shard * n_local, -1)
         # Gather every shard's candidate buffer: [S, Q, k].
@@ -62,18 +98,16 @@ def make_search_step(
         merged = _merge.merge_topk(all_ids, all_counts, params.k)
         return merged
 
-    sharded = shard_map(
-        _local,
-        mesh=mesh,
+    sharded = shard_map_compat(
+        _local, mesh,
         in_specs=(P(axes), P(None, None)),
-        out_specs=TopKResult(ids=P(None, None), counts=P(None, None), threshold=P(None)),
-        check_vma=False,
+        out_specs=_out_specs(),
     )
     return jax.jit(sharded)
 
 
 def data_sharding(mesh: jax.sharding.Mesh) -> jax.sharding.NamedSharding:
-    """NamedSharding for the object-partitioned signature matrix [N, m]."""
+    """NamedSharding for the object-partitioned data matrix [N, ...]."""
     return jax.sharding.NamedSharding(mesh, P(tuple(mesh.axis_names)))
 
 
@@ -84,7 +118,7 @@ def replicated(mesh: jax.sharding.Mesh, ndim: int) -> jax.sharding.NamedSharding
 def make_hierarchical_search_step(
     mesh: jax.sharding.Mesh,
     params: SearchParams,
-    match_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
+    match_fn: MatchLike,
 ):
     """Two-level merge variant: reduce candidate buffers inside a pod first
     (cheap ICI), then across pods (expensive DCN) -- merge order does not
@@ -98,11 +132,12 @@ def make_hierarchical_search_step(
     if axes[0] != "pod":
         return make_search_step(mesh, params, match_fn)
     inner_axes = axes[1:]
+    match = _engines.resolve_match_fn(match_fn)
 
-    def _local(data_local: jnp.ndarray, queries: jnp.ndarray) -> TopKResult:
+    def _local(data_local: jnp.ndarray, queries: Any) -> TopKResult:
         n_local = data_local.shape[0]
-        counts = match_fn(data_local, queries)
-        local = _cpq.cpq_select(counts, params)
+        counts = match(data_local, queries)
+        local = select_topk(counts, params)
         shard = shard_linear_index(axes)
         gids = jnp.where(local.ids >= 0, local.ids + shard * n_local, -1)
         # level 1: merge within the pod (over data/model axes).
@@ -114,11 +149,9 @@ def make_hierarchical_search_step(
         cnt_out = jax.lax.all_gather(pod_merged.counts, axis_name=("pod",), axis=0, tiled=False)
         return _merge.merge_topk(ids_out, cnt_out, params.k)
 
-    sharded = shard_map(
-        _local,
-        mesh=mesh,
+    sharded = shard_map_compat(
+        _local, mesh,
         in_specs=(P(axes), P(None, None)),
-        out_specs=TopKResult(ids=P(None, None), counts=P(None, None), threshold=P(None)),
-        check_vma=False,
+        out_specs=_out_specs(),
     )
     return jax.jit(sharded)

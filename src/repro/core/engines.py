@@ -1,0 +1,219 @@
+"""MatchModel registry: one descriptor per match-count engine.
+
+GENIE's central claim is *genericity* -- one inverted-index machinery serving
+many data types and similarity measures (paper section II).  This module makes
+that claim structural: every engine (EQ, RANGE, MINSUM, IP, and any future
+measure) is a single `MatchModel` descriptor bundling
+
+  * the reference match function (core/match.py -- the semantics oracle),
+  * the Pallas kernel wrapper (kernels/ops.py -- the TPU hot path),
+  * query canonicalisation (so every engine exposes the same
+    ``fn(data, queries) -> counts[Q, N]`` signature; RANGE queries are the
+    pytree ``(lo, hi)``),
+  * data preparation + index statistics (what GenieIndex.build_* duplicated),
+  * the count-dtype policy (Bitmap-Counter bit-bounding, paper III-C),
+  * the multiload padding fill (a value that can never out-score real rows).
+
+GenieIndex, core.multiload, core.distributed, and launch.dryrun all resolve
+engines through `get()` -- there is exactly one dispatch point in the system.
+Registering a new similarity measure is one `register(MatchModel(...))` call;
+see docs/ENGINES.md for the contract and a worked example.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import match as _match
+from repro.core.types import Engine, IndexStats
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchModel:
+    """Descriptor for one match-count engine (paper Definition 2.1).
+
+    The canonical match signature is ``fn(data, queries) -> counts [Q, N]``
+    where `queries` is this engine's canonical query pytree (produced by
+    `prepare_queries`).  Both `reference` and `kernel` use it, so multiload,
+    distributed sharding, and serving are engine-agnostic.
+    """
+
+    engine: Engine
+    description: str
+    # raw user data -> device-resident index array (dtype/canonical form)
+    prepare_data: Callable[[Any], jnp.ndarray]
+    # raw queries -> canonical query pytree of device arrays
+    prepare_queries: Callable[[Any], Any]
+    # pure-jnp reference semantics (core/match.py), canonical signature
+    reference: Callable[[jnp.ndarray, Any], jnp.ndarray]
+    # Pallas kernel wrapper (kernels/ops.py), canonical signature; lazily
+    # imports the kernels so CPU-only uses never pay for them
+    kernel: Callable[[jnp.ndarray, Any], jnp.ndarray]
+    # index statistics: postings count for this data layout
+    postings_count: Callable[[jnp.ndarray], int]
+    # default count-domain bound, or None when the caller must supply one
+    default_max_count: Callable[[jnp.ndarray], Optional[int]]
+    # multiload row fill: padded rows must never beat real rows
+    pad_value: Any = -1
+
+    # -- dispatch -----------------------------------------------------------
+    def match_fn(self, use_kernel: bool) -> Callable[[jnp.ndarray, Any], jnp.ndarray]:
+        """The canonical match callable for this engine (kernel or reference)."""
+        return self.kernel if use_kernel else self.reference
+
+    def match_counts(self, data: jnp.ndarray, queries: Any, use_kernel: bool) -> jnp.ndarray:
+        """counts int32 [Q, N]; `queries` may be raw (canonicalised here)."""
+        return self.match_fn(use_kernel)(data, self.prepare_queries(queries))
+
+    # -- build-time policy --------------------------------------------------
+    def build_stats(self, data: jnp.ndarray) -> IndexStats:
+        return IndexStats(
+            n_objects=int(data.shape[0]),
+            n_lists=int(data.shape[1]),
+            total_postings=int(self.postings_count(data)),
+            bytes_device=int(data.size) * data.dtype.itemsize,
+            extra={"engine": self.engine.value},
+        )
+
+    def resolve_max_count(self, data: jnp.ndarray, max_count: Optional[int]) -> int:
+        if max_count is not None:
+            return int(max_count)
+        derived = self.default_max_count(data)
+        if derived is None:
+            raise ValueError(
+                f"engine {self.engine.value!r} has no derivable count bound; "
+                f"pass max_count explicitly"
+            )
+        return int(derived)
+
+    def count_dtype(self, max_count: int) -> jnp.dtype:
+        """Bitmap-Counter policy: narrowest lossless count dtype (III-C)."""
+        probe = _match.as_count_dtype(jnp.zeros((), jnp.int32), max_count)
+        return probe.dtype
+
+    def as_count_dtype(self, counts: jnp.ndarray, max_count: int) -> jnp.ndarray:
+        return _match.as_count_dtype(counts, max_count)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[Engine, MatchModel] = {}
+
+
+def register(model: MatchModel) -> MatchModel:
+    """Register (or replace) the descriptor for `model.engine`."""
+    _REGISTRY[model.engine] = model
+    return model
+
+
+def get(engine: Engine | str | MatchModel) -> MatchModel:
+    """Resolve an Engine, its string value, or a MatchModel to a descriptor."""
+    if isinstance(model := engine, MatchModel):
+        return model
+    eng = Engine(engine)
+    try:
+        return _REGISTRY[eng]
+    except KeyError:
+        raise KeyError(
+            f"no MatchModel registered for engine {eng.value!r}; "
+            f"known: {sorted(m.value for m in _REGISTRY)}"
+        ) from None
+
+
+def available() -> tuple[Engine, ...]:
+    return tuple(_REGISTRY)
+
+
+def resolve_match_fn(engine, use_kernel: bool = False):
+    """Engine/str/MatchModel/callable -> canonical match callable.
+
+    Raw callables pass through untouched (back-compat for code that hands a
+    bare ``fn(data, queries)`` to distributed/multiload search).
+    """
+    if callable(engine) and not isinstance(engine, (MatchModel, Engine, str)):
+        return engine
+    return get(engine).match_fn(use_kernel)
+
+
+# ---------------------------------------------------------------------------
+# Built-in engines (paper sections IV-V)
+# ---------------------------------------------------------------------------
+
+def _kernel_eq(data, queries):
+    from repro.kernels import ops as kops
+
+    return kops.match_count(data, queries)
+
+
+def _kernel_range(data, queries):
+    from repro.kernels import ops as kops
+
+    lo, hi = queries
+    return kops.range_count(data, lo, hi)
+
+
+def _kernel_minsum(data, queries):
+    from repro.kernels import ops as kops
+
+    return kops.minsum_count(data, queries)
+
+
+def _kernel_ip(data, queries):
+    from repro.kernels import ops as kops
+
+    return kops.ip_count(data, queries)
+
+
+register(MatchModel(
+    engine=Engine.EQ,
+    description="signature equality compare over LSH signatures int32 [N, m]",
+    prepare_data=lambda x: jnp.asarray(x, dtype=jnp.int32),
+    prepare_queries=lambda q: jnp.asarray(q, dtype=jnp.int32),
+    reference=_match.match_eq,
+    kernel=_kernel_eq,
+    postings_count=lambda a: int(a.shape[0]) * int(a.shape[1]),
+    default_max_count=lambda a: int(a.shape[1]),          # m hash functions
+    pad_value=-1,                                          # never equals a sig
+))
+
+register(MatchModel(
+    engine=Engine.RANGE,
+    description="per-attribute interval predicate over discretized tuples int32 [N, d]",
+    prepare_data=lambda x: jnp.asarray(x, dtype=jnp.int32),
+    prepare_queries=lambda q: (jnp.asarray(q[0], dtype=jnp.int32),
+                               jnp.asarray(q[1], dtype=jnp.int32)),
+    reference=lambda d, q: _match.match_range(d, q[0], q[1]),
+    kernel=_kernel_range,
+    postings_count=lambda a: int(a.size),
+    default_max_count=lambda a: int(a.shape[1]),          # #attributes
+    pad_value=np.iinfo(np.int32).min,                     # below any query lo
+))
+
+register(MatchModel(
+    engine=Engine.MINSUM,
+    description="multiset intersection sum_v min(c_data, c_query) over count vectors [N, V]",
+    prepare_data=lambda x: jnp.asarray(x, dtype=jnp.int32),
+    prepare_queries=lambda q: jnp.asarray(q, dtype=jnp.int32),
+    reference=_match.match_minsum,
+    kernel=_kernel_minsum,
+    postings_count=lambda a: int(np.asarray(jnp.sum(a))),
+    default_max_count=lambda a: None,                     # caller supplies bound
+    pad_value=-1,                                          # min(-1, q) sums < 0
+))
+
+register(MatchModel(
+    engine=Engine.IP,
+    description="binary inner product on the MXU over word vectors [N, V]",
+    prepare_data=jnp.asarray,                              # keep caller dtype
+    prepare_queries=jnp.asarray,
+    reference=_match.match_ip,
+    kernel=_kernel_ip,
+    postings_count=lambda a: int(np.asarray(jnp.sum(a.astype(jnp.int32)))),
+    default_max_count=lambda a: None,                     # caller supplies bound
+    pad_value=0,                                           # zero dot product
+))

@@ -1,16 +1,20 @@
 """GenieIndex: the user-facing GENIE index (paper sections II-III).
 
 Holds device-resident transformed data (signatures / count vectors / binary
-vectors / discretized tuples), dispatches the match-count computation to the
-Pallas kernels (or the pure-jnp engines), and selects top-k with c-PQ
-(default), SPQ, or full sort.
+vectors / discretized tuples) and resolves *everything* engine-specific --
+data preparation, query canonicalisation, kernel-vs-reference match dispatch,
+index statistics, count-domain bounds -- through the MatchModel registry
+(core/engines.py).  Top-k selection goes through the shared `select_topk`
+pipeline (core/select.py) for every path: single-device, multiload streaming,
+and the distributed step in core/distributed.py.
 
-    index = GenieIndex.build_lsh(sigs, max_count=m)
-    result = index.search(query_sigs, k=100)            # TopKResult
+    index = GenieIndex.build(Engine.EQ, sigs)            # generic builder
+    index = GenieIndex.build_lsh(sigs, max_count=m)      # named alias
+    result = index.search(query_sigs, k=100)             # TopKResult
 
-Large-than-memory data uses `search_multiload`; multi-device search goes
-through core.distributed (the index there is just the sharded signature
-matrix).
+Larger-than-memory data uses `search_multiload` (all registered engines);
+multi-device search goes through core.distributed (the index there is just
+the sharded data matrix plus an Engine name).
 """
 from __future__ import annotations
 
@@ -19,12 +23,10 @@ import time
 from typing import Optional
 
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import cpq as _cpq
-from repro.core import match as _match
+from repro.core import engines as _engines
 from repro.core import multiload as _multiload
-from repro.core import spq as _spq
+from repro.core.select import select_topk
 from repro.core.types import Engine, IndexStats, SearchParams, TopKMethod, TopKResult
 
 
@@ -41,116 +43,82 @@ class GenieIndex:
     # Builders
     # ------------------------------------------------------------------
     @classmethod
+    def build(cls, engine: Engine | str, data, max_count: int | None = None,
+              use_kernel: bool = True) -> "GenieIndex":
+        """Generic builder: any registered engine, one code path.
+
+        `max_count` defaults to the engine's derived count bound (e.g. m for
+        EQ, #attributes for RANGE); engines without a derivable bound
+        (MINSUM, IP) require it explicitly.
+        """
+        model = _engines.get(engine)
+        t0 = time.time()
+        arr = model.prepare_data(data)
+        stats = model.build_stats(arr)
+        stats.build_seconds = time.time() - t0
+        return cls(engine=model.engine,
+                   max_count=model.resolve_max_count(arr, max_count),
+                   data=arr, stats=stats, use_kernel=use_kernel)
+
+    # Thin named aliases kept for API compatibility with existing callers.
+    @classmethod
     def build_lsh(cls, signatures, max_count: int | None = None, use_kernel: bool = True):
         """EQ engine over LSH signatures int32 [N, m]."""
-        t0 = time.time()
-        sigs = jnp.asarray(signatures, dtype=jnp.int32)
-        n, m = sigs.shape
-        stats = IndexStats(
-            n_objects=n, n_lists=m, total_postings=n * m,
-            bytes_device=sigs.size * 4, build_seconds=time.time() - t0,
-        )
-        return cls(engine=Engine.EQ, max_count=max_count or m, data=sigs,
-                   stats=stats, use_kernel=use_kernel)
+        return cls.build(Engine.EQ, signatures, max_count=max_count, use_kernel=use_kernel)
 
     @classmethod
     def build_minsum(cls, count_vectors, max_count: int, use_kernel: bool = True):
         """MINSUM engine over n-gram count vectors int [N, V]."""
-        t0 = time.time()
-        cv = jnp.asarray(count_vectors, dtype=jnp.int32)
-        stats = IndexStats(
-            n_objects=cv.shape[0], n_lists=cv.shape[1],
-            total_postings=int(np.asarray(jnp.sum(cv))),
-            bytes_device=cv.size * 4, build_seconds=time.time() - t0,
-        )
-        return cls(engine=Engine.MINSUM, max_count=max_count, data=cv,
-                   stats=stats, use_kernel=use_kernel)
+        return cls.build(Engine.MINSUM, count_vectors, max_count=max_count,
+                         use_kernel=use_kernel)
 
     @classmethod
     def build_ip(cls, binary_vectors, max_count: int, use_kernel: bool = True):
         """IP engine over binary word vectors [N, V]."""
-        t0 = time.time()
-        bv = jnp.asarray(binary_vectors)
-        stats = IndexStats(
-            n_objects=bv.shape[0], n_lists=bv.shape[1],
-            total_postings=int(np.asarray(jnp.sum(bv.astype(jnp.int32)))),
-            bytes_device=bv.size * bv.dtype.itemsize, build_seconds=time.time() - t0,
-        )
-        return cls(engine=Engine.IP, max_count=max_count, data=bv,
-                   stats=stats, use_kernel=use_kernel)
+        return cls.build(Engine.IP, binary_vectors, max_count=max_count,
+                         use_kernel=use_kernel)
 
     @classmethod
     def build_relational(cls, discrete_tuples, use_kernel: bool = True):
         """RANGE engine over discretized tuples int32 [N, d]."""
-        t0 = time.time()
-        x = jnp.asarray(discrete_tuples, dtype=jnp.int32)
-        stats = IndexStats(
-            n_objects=x.shape[0], n_lists=x.shape[1], total_postings=x.size,
-            bytes_device=x.size * 4, build_seconds=time.time() - t0,
-        )
-        return cls(engine=Engine.RANGE, max_count=x.shape[1], data=x,
-                   stats=stats, use_kernel=use_kernel)
+        return cls.build(Engine.RANGE, discrete_tuples, use_kernel=use_kernel)
 
     # ------------------------------------------------------------------
     # Matching + selection
     # ------------------------------------------------------------------
+    @property
+    def model(self) -> _engines.MatchModel:
+        return _engines.get(self.engine)
+
     def match_counts(self, queries) -> jnp.ndarray:
         """counts int32 [Q, N] under this index's engine."""
-        if self.use_kernel:
-            from repro.kernels import ops as kops
-
-            if self.engine == Engine.EQ:
-                return kops.match_count(self.data, jnp.asarray(queries, jnp.int32))
-            if self.engine == Engine.RANGE:
-                lo, hi = queries
-                return kops.range_count(self.data, jnp.asarray(lo), jnp.asarray(hi))
-            if self.engine == Engine.MINSUM:
-                return kops.minsum_count(self.data, jnp.asarray(queries, jnp.int32))
-            if self.engine == Engine.IP:
-                return kops.ip_count(self.data, jnp.asarray(queries))
-        else:
-            if self.engine == Engine.EQ:
-                return _match.match_eq(self.data, jnp.asarray(queries, jnp.int32))
-            if self.engine == Engine.RANGE:
-                lo, hi = queries
-                return _match.match_range(self.data, jnp.asarray(lo), jnp.asarray(hi))
-            if self.engine == Engine.MINSUM:
-                return _match.match_minsum(self.data, jnp.asarray(queries, jnp.int32))
-            if self.engine == Engine.IP:
-                return _match.match_ip(self.data, jnp.asarray(queries))
-        raise ValueError(f"unknown engine {self.engine}")
+        return self.model.match_counts(self.data, queries, self.use_kernel)
 
     def search(self, queries, k: int, method: TopKMethod = TopKMethod.CPQ,
                candidate_cap: int | None = None) -> TopKResult:
         params = SearchParams(k=k, max_count=self.max_count, method=method,
                               candidate_cap=candidate_cap, use_kernel=self.use_kernel)
         counts = self.match_counts(queries)
-        if method == TopKMethod.CPQ:
-            hist = None
-            if self.use_kernel:
-                from repro.kernels import ops as kops
+        return select_topk(counts, params, use_fused_hist=self.use_kernel)
 
-                hist = kops.cpq_hist(counts, self.max_count)
-            return _cpq.cpq_select(counts, params, hist=hist)
-        if method == TopKMethod.SPQ:
-            return _spq.spq_select(counts, params)
-        return _cpq.sort_select(counts, params)
+    def search_multiload(self, queries, k: int, n_parts: int,
+                         method: TopKMethod = TopKMethod.CPQ) -> TopKResult:
+        """Paper section III-D: split this index into parts and stream them.
 
-    def search_multiload(self, queries, k: int, n_parts: int) -> TopKResult:
-        """Paper section III-D: split this index into parts and stream them."""
+        Works for every registered engine: parts are padded with the engine's
+        neutral fill and pad rows are masked out of the merged result.
+        """
+        model = self.model
         n = self.stats.n_objects
         part = -(-n // n_parts)
         pad = part * n_parts - n
         data = self.data
         if pad:
-            fill = jnp.full((pad,) + data.shape[1:], -1, dtype=data.dtype)
+            fill = jnp.full((pad,) + data.shape[1:], model.pad_value, dtype=data.dtype)
             data = jnp.concatenate([data, fill], axis=0)
         chunks = data.reshape(n_parts, part, *data.shape[1:])
-        params = SearchParams(k=k, max_count=self.max_count)
-        if self.engine == Engine.EQ:
-            match_fn = lambda d, q: _match.match_eq(d, q)
-        elif self.engine == Engine.MINSUM:
-            match_fn = lambda d, q: _match.match_minsum(d, q)
-        else:
-            raise ValueError("multiload demo supports EQ/MINSUM engines")
-        return _multiload.multiload_search(chunks, jnp.asarray(queries), params, match_fn)
+        params = SearchParams(k=k, max_count=self.max_count, method=method)
+        return _multiload.multiload_search(
+            chunks, model.prepare_queries(queries), params,
+            model.match_fn(use_kernel=False), n_objects=n,
+        )

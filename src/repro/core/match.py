@@ -1,9 +1,12 @@
-"""Match-count engines (paper Definition 2.1), TPU-native dense formulations.
+"""Match-count reference semantics (paper Definition 2.1), TPU-native dense
+formulations.
 
-Each engine computes counts[q, n] = MC(Q_q, O_n) for a query batch against all
-objects.  Pure-jnp implementations here double as the oracles for the Pallas
-kernels in repro.kernels (ops.py wrappers dispatch to the kernels; these
-functions are the reference semantics and the small-scale fallback).
+Each function computes counts[q, n] = MC(Q_q, O_n) for a query batch against
+all objects.  These pure-jnp implementations are the semantics oracles for the
+Pallas kernels in repro.kernels and the small-scale fallback path.  They are
+not called directly by the index machinery: engine dispatch goes through the
+MatchModel registry (core/engines.py), where each engine's descriptor pairs
+the reference here with its kernel, query canonicalisation, and build policy.
 
 Memory note: counts are bounded by max_count (m hash functions / #attributes /
 #grams) -- the paper's Bitmap-Counter observation (section III-C) -- so an int8

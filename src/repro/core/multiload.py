@@ -4,34 +4,53 @@ memory by streaming index parts and merging per-part top-k results.
 On the GPU the parts are copied host->device serially; on TPU the parts are a
 stacked HBM-resident array consumed by lax.scan (double-buffered by XLA), or a
 host python loop when the stack itself exceeds HBM.  The per-part search is
-the dense match + c-PQ select; the merge is core.merge (valid because parts
-partition the object set -- counts never need cross-part summation).
+the dense match + shared `select_topk` pipeline; the merge is core.merge
+(valid because parts partition the object set -- counts never need cross-part
+summation).
+
+The match function uses the canonical registry signature
+``match_fn(data, queries) -> counts`` (core/engines.py), so every registered
+engine streams the same way -- queries may be any pytree of arrays (RANGE
+passes the ``(lo, hi)`` pair) since they are closed over, not scanned.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import cpq as _cpq
+from repro.core.select import select_topk
 from repro.core.types import SearchParams, TopKResult
+
+
+def _mask_invalid(gids: jnp.ndarray, counts: jnp.ndarray, n_objects: Optional[int]):
+    """Drop padding rows: ids at/above the true object count never merge."""
+    valid = gids >= 0
+    if n_objects is not None:
+        valid &= gids < n_objects
+    return jnp.where(valid, gids, -1), jnp.where(valid, counts, -1)
 
 
 def multiload_search(
     chunks: jnp.ndarray,
-    query_sigs: jnp.ndarray,
+    queries: Any,
     params: SearchParams,
-    match_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
+    match_fn: Callable[[jnp.ndarray, Any], jnp.ndarray],
+    n_objects: Optional[int] = None,
 ) -> TopKResult:
     """Search C stacked index parts with a scanned merge.
 
-    chunks:     [C, Nc, m]  stacked per-part signature matrices.
-    query_sigs: [Q, m].
-    match_fn:   (data [Nc, m], queries [Q, m]) -> counts [Q, Nc].
+    chunks:    [C, Nc, ...] stacked per-part data matrices.
+    queries:   canonical query pytree (single [Q, m] array for EQ/MINSUM/IP,
+               an (lo, hi) pair for RANGE).
+    match_fn:  (data [Nc, ...], queries) -> counts [Q, Nc].
+    n_objects: true object count; rows with global id >= n_objects are
+               padding from an uneven split and are masked out.
     """
-    c, nc, _ = chunks.shape
-    q = query_sigs.shape[0]
+    c, nc = chunks.shape[0], chunks.shape[1]
+    q = jax.tree_util.tree_leaves(queries)[0].shape[0]
     k = params.k
 
     init = (
@@ -42,11 +61,12 @@ def multiload_search(
     def step(carry, xs):
         best_ids, best_counts = carry
         part, chunk_idx = xs
-        counts = match_fn(part, query_sigs)
-        local = _cpq.cpq_select(counts, params)
+        counts = match_fn(part, queries)
+        local = select_topk(counts, params)
         global_ids = jnp.where(local.ids >= 0, local.ids + chunk_idx * nc, -1)
-        ids = jnp.concatenate([best_ids, global_ids[:, :k]], axis=-1)
-        cnt = jnp.concatenate([best_counts, local.counts[:, :k]], axis=-1)
+        gids, gcnt = _mask_invalid(global_ids, local.counts, n_objects)
+        ids = jnp.concatenate([best_ids, gids[:, :k]], axis=-1)
+        cnt = jnp.concatenate([best_counts, gcnt[:, :k]], axis=-1)
         new_ids, new_counts = _cpq.topk_from_candidates(ids, cnt, k)
         return (new_ids, new_counts), None
 
@@ -54,22 +74,24 @@ def multiload_search(
     return TopKResult(ids=ids, counts=counts, threshold=counts[:, -1])
 
 
-def multiload_search_host(parts, query_sigs, params, match_fn) -> TopKResult:
+def multiload_search_host(parts, queries, params, match_fn,
+                          n_objects: Optional[int] = None) -> TopKResult:
     """Host-loop variant: `parts` is a python list of per-part arrays that are
     device_put one at a time (the literal paper strategy -- parts live in host
     memory and are swapped through the device)."""
-    q = query_sigs.shape[0]
+    q = jax.tree_util.tree_leaves(queries)[0].shape[0]
     k = params.k
     best_ids = jnp.full((q, k), -1, dtype=jnp.int32)
     best_counts = jnp.full((q, k), -1, dtype=jnp.int32)
     offset = 0
     for part in parts:
         part = jax.device_put(part)
-        counts = match_fn(part, query_sigs)
-        local = _cpq.cpq_select(counts, params)
+        counts = match_fn(part, queries)
+        local = select_topk(counts, params)
         gids = jnp.where(local.ids >= 0, local.ids + offset, -1)
+        gids, gcnt = _mask_invalid(gids, local.counts, n_objects)
         ids = jnp.concatenate([best_ids, gids[:, :k]], axis=-1)
-        cnt = jnp.concatenate([best_counts, local.counts[:, :k]], axis=-1)
+        cnt = jnp.concatenate([best_counts, gcnt[:, :k]], axis=-1)
         best_ids, best_counts = _cpq.topk_from_candidates(ids, cnt, k)
         offset += int(part.shape[0])
     return TopKResult(ids=best_ids, counts=best_counts, threshold=best_counts[:, -1])

@@ -120,7 +120,7 @@ def _lower_lm(cfg, shape, mesh, accum_override=None):
     api = get_api(cfg)
     # training uses the per-arch DP/TP choice; serving always uses TP
     use_tp = cfg.use_tp if shape.kind == "train" else cfg.use_tp_serve
-    with jax.sharding.set_mesh(mesh):
+    with mesh_lib.use_mesh(mesh):
         batch_sds = shapes_lib.input_specs(cfg, shape)
         batch_sh = sh_lib.batch_shardings(batch_sds, mesh, use_tp)
         params_shapes = jax.eval_shape(lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
@@ -282,7 +282,6 @@ def run_lm_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
 def run_genie_cell(dataset: str, mesh_kind: str) -> dict:
     from repro.configs.genie_datasets import DATASETS
     from repro.core import distributed as dist
-    from repro.core import match as match_lib
     from repro.core.types import SearchParams
 
     ds = DATASETS[dataset]
@@ -292,6 +291,9 @@ def run_genie_cell(dataset: str, mesh_kind: str) -> dict:
     q = ds.queries_per_batch
     params = SearchParams(k=ds.default_k, max_count=ds.m if ds.engine == "eq" else ds.dim)
 
+    # Input shapes/dtypes are dataset metadata; the match function itself is
+    # resolved from the MatchModel registry by engine name inside
+    # make_search_step -- no per-engine dispatch here.
     if ds.engine == "eq":
         # signature dtype: narrowest int that holds the rehash domain
         # (hillclimb C: int8 SIFT signatures quarter the dominant HBM stream)
@@ -299,32 +301,28 @@ def run_genie_cell(dataset: str, mesh_kind: str) -> dict:
             jnp.int16 if ds.n_buckets <= 32767 else jnp.int32)
         data_sds = jax.ShapeDtypeStruct((n, ds.m), sig_dt)
         query_sds = jax.ShapeDtypeStruct((q, ds.m), sig_dt)
-        match_fn = match_lib.match_eq
     elif ds.engine == "minsum":
         data_sds = jax.ShapeDtypeStruct((n, ds.m), jnp.int8)
         query_sds = jax.ShapeDtypeStruct((q, ds.m), jnp.int8)
-        match_fn = match_lib.match_minsum
         params = SearchParams(k=ds.default_k, max_count=127)
     elif ds.engine == "ip":
         data_sds = jax.ShapeDtypeStruct((n, ds.m), jnp.int8)
         query_sds = jax.ShapeDtypeStruct((q, ds.m), jnp.int8)
-        match_fn = match_lib.match_ip
         params = SearchParams(k=ds.default_k, max_count=ds.dim * 4)
-    else:  # range
+    else:  # range: queries are the canonical (lo, hi) pytree
         data_sds = jax.ShapeDtypeStruct((n, ds.dim), jnp.int32)
         query_sds = (
             jax.ShapeDtypeStruct((q, ds.dim), jnp.int32),
             jax.ShapeDtypeStruct((q, ds.dim), jnp.int32),
         )
-        match_fn = lambda d, qq: match_lib.match_range(d, qq[0], qq[1])
         params = SearchParams(k=ds.default_k, max_count=ds.dim)
 
     t0 = time.time()
-    with jax.sharding.set_mesh(mesh):
+    with mesh_lib.use_mesh(mesh):
         step = (
-            dist.make_hierarchical_search_step(mesh, params, match_fn)
+            dist.make_hierarchical_search_step(mesh, params, ds.engine)
             if mesh_kind == "multi"
-            else dist.make_search_step(mesh, params, match_fn)
+            else dist.make_search_step(mesh, params, ds.engine)
         )
         lowered = step.lower(data_sds, query_sds)
         compiled = lowered.compile()

@@ -9,25 +9,44 @@ any jax import; everything else sees the real device count).
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """Version-portable jax.make_mesh: `axis_types` only exists on newer jax
+    (and Auto is already the default there); older releases reject the kwarg."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: jax.sharding.Mesh):
+    """Version-portable ambient mesh: jax.sharding.set_mesh on newer jax,
+    the Mesh context manager on older releases."""
+    if hasattr(jax.sharding, "set_mesh"):
+        with jax.sharding.set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
     """Mesh over whatever devices exist (tests / CPU driver runs)."""
     n = len(jax.devices())
     assert n % model_parallel == 0
-    return jax.make_mesh(
-        (n // model_parallel, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((n // model_parallel, model_parallel), ("data", "model"))
 
 
 def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

@@ -2,10 +2,15 @@
 feature.
 
 A RetrievalService wraps an embedding function (e.g. mean-pooled hidden
-states of any registered LM, or raw feature vectors), an LSH scheme, and a
-GenieIndex; `add`/`search` give τ-ANN document retrieval for
-retrieval-augmented serving (examples/serve_batch.py drives it at batch
-1024+, the paper's throughput regime).
+states of any registered LM, or raw feature vectors), an LSH scheme resolved
+from the scheme registry (core/lsh/__init__.py), and a GenieIndex;
+`add`/`search` give tau-ANN document retrieval for retrieval-augmented
+serving (examples/serve_batch.py drives it at batch 1024+, the paper's
+throughput regime).
+
+`add` may be called repeatedly: items append to the corpus and the index is
+rebuilt over the accumulated signatures (signatures are cached, so only the
+new items are hashed).
 """
 from __future__ import annotations
 
@@ -17,13 +22,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import GenieIndex, TopKMethod
-from repro.core.lsh import e2lsh, rbh, simhash, tau_ann
+from repro.core import lsh as lsh_lib
+from repro.core.lsh import tau_ann
 
 
 @dataclasses.dataclass
 class RetrievalService:
     embed_fn: Callable[[np.ndarray], np.ndarray]   # raw items -> [n, d] embeddings
-    scheme: str = "e2lsh"                          # e2lsh | rbh | simhash
+    scheme: str = "e2lsh"                          # any registered LshScheme name
     eps: float = 0.06
     delta: float = 0.06
     n_buckets: int = 8192
@@ -34,31 +40,35 @@ class RetrievalService:
 
     def __post_init__(self):
         self.m = self.m_override or tau_ann.required_m(self.eps, self.delta)
+        self._scheme = lsh_lib.get_scheme(self.scheme)
         self._params = None
         self._index: Optional[GenieIndex] = None
         self._items: list = []
+        self._sigs: Optional[jnp.ndarray] = None
 
     def _make_params(self, d: int):
         key = jax.random.PRNGKey(self.seed)
-        if self.scheme == "e2lsh":
-            return e2lsh.make(key, d=d, m=self.m, w=self.w, n_buckets=self.n_buckets)
-        if self.scheme == "rbh":
-            return rbh.make(key, d=d, m=self.m, sigma=self.sigma, n_buckets=self.n_buckets)
-        if self.scheme == "simhash":
-            return simhash.make(key, d=d, m=self.m)
-        raise ValueError(self.scheme)
+        return self._scheme.make_params(
+            key, d=d, m=self.m,
+            w=self.w, sigma=self.sigma, n_buckets=self.n_buckets,
+        )
 
     def _hash(self, x: np.ndarray) -> jnp.ndarray:
-        mod = {"e2lsh": e2lsh, "rbh": rbh, "simhash": simhash}[self.scheme]
-        return mod.hash_points(self._params, jnp.asarray(x))
+        return self._scheme.hash_points(self._params, jnp.asarray(x))
 
     def add(self, items, embeddings: Optional[np.ndarray] = None) -> None:
+        """Add items to the corpus (appends; the index covers every add)."""
         emb = self.embed_fn(items) if embeddings is None else embeddings
         if self._params is None:
             self._params = self._make_params(emb.shape[-1])
         sigs = self._hash(emb)
-        self._items = list(items)
-        self._index = GenieIndex.build_lsh(sigs, max_count=self.m)
+        self._items.extend(list(items))
+        self._sigs = sigs if self._sigs is None else jnp.concatenate(
+            [self._sigs, sigs], axis=0)
+        self._index = GenieIndex.build_lsh(self._sigs, max_count=self.m)
+
+    def __len__(self) -> int:
+        return len(self._items)
 
     def search(self, queries, k: int = 10, *, embeddings: Optional[np.ndarray] = None,
                method: TopKMethod = TopKMethod.CPQ):

@@ -1,8 +1,12 @@
-"""c-PQ exactness (paper Theorem 3.1) and selection-method agreement."""
+"""c-PQ exactness (paper Theorem 3.1) and selection-method agreement.
+
+Formerly hypothesis property tests; rewritten as seeded-random parametrized
+cases so the tier-1 suite runs on environments without hypothesis (same
+coverage: each case draws its shape/k/max_count from an independent seed).
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import cpq, merge, spq
 from repro.core.types import SearchParams
@@ -12,16 +16,14 @@ def _sorted_counts(counts, k):
     return np.sort(counts, axis=1)[:, ::-1][:, :k]
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    q=st.integers(1, 4),
-    n=st.integers(1, 200),
-    mx=st.integers(1, 40),
-    k=st.integers(1, 20),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_cpq_matches_sort_topk(q, n, mx, k, seed):
-    counts = np.random.default_rng(seed).integers(0, mx + 1, size=(q, n)).astype(np.int32)
+@pytest.mark.parametrize("case", range(25))
+def test_cpq_matches_sort_topk(case):
+    draw = np.random.default_rng(1000 + case)
+    q = int(draw.integers(1, 5))
+    n = int(draw.integers(1, 201))
+    mx = int(draw.integers(1, 41))
+    k = int(draw.integers(1, 21))
+    counts = draw.integers(0, mx + 1, size=(q, n)).astype(np.int32)
     p = SearchParams(k=k, max_count=mx)
     res = cpq.cpq_select(jnp.asarray(counts), p)
     want = _sorted_counts(counts, k)
@@ -32,16 +34,14 @@ def test_cpq_matches_sort_topk(q, n, mx, k, seed):
         assert np.all(got[:, n:] == -1)
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    n=st.integers(1, 300),
-    mx=st.integers(1, 30),
-    k=st.integers(1, 10),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_threshold_is_kth_count(n, mx, k, seed):
+@pytest.mark.parametrize("case", range(25))
+def test_threshold_is_kth_count(case):
     """Theorem 3.1: AT - 1 == MC_k (count of the k-th object)."""
-    counts = np.random.default_rng(seed).integers(0, mx + 1, size=(2, n)).astype(np.int32)
+    draw = np.random.default_rng(2000 + case)
+    n = int(draw.integers(1, 301))
+    mx = int(draw.integers(1, 31))
+    k = int(draw.integers(1, 11))
+    counts = draw.integers(0, mx + 1, size=(2, n)).astype(np.int32)
     p = SearchParams(k=k, max_count=mx)
     res = cpq.cpq_select(jnp.asarray(counts), p)
     if n >= k:
@@ -60,15 +60,13 @@ def test_returned_ids_have_returned_counts(rng):
         assert np.all(np.diff(vals[qi]) <= 0)
 
 
-@settings(max_examples=15, deadline=None)
-@given(
-    n=st.integers(2, 200),
-    mx=st.integers(1, 25),
-    k=st.integers(1, 12),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_spq_matches_sort(n, mx, k, seed):
-    counts = np.random.default_rng(seed).integers(0, mx + 1, size=(2, n)).astype(np.int32)
+@pytest.mark.parametrize("case", range(15))
+def test_spq_matches_sort(case):
+    draw = np.random.default_rng(3000 + case)
+    n = int(draw.integers(2, 201))
+    mx = int(draw.integers(1, 26))
+    k = int(draw.integers(1, 13))
+    counts = draw.integers(0, mx + 1, size=(2, n)).astype(np.int32)
     p = SearchParams(k=k, max_count=mx)
     res = spq.spq_select(jnp.asarray(counts), p)
     want = _sorted_counts(counts, min(k, n))
@@ -88,18 +86,15 @@ def test_gate_audit_threshold_properties(rng):
         assert za[qi, at[qi] - 1] >= 7
 
 
-@settings(max_examples=15, deadline=None)
-@given(
-    parts=st.integers(1, 5),
-    n_per=st.integers(1, 60),
-    k=st.integers(1, 8),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_merge_equals_global_topk(parts, n_per, k, seed):
+@pytest.mark.parametrize("case", range(15))
+def test_merge_equals_global_topk(case):
     """Merging per-part top-k == top-k of the union (multiload correctness)."""
-    rng = np.random.default_rng(seed)
+    draw = np.random.default_rng(4000 + case)
+    parts = int(draw.integers(1, 6))
+    n_per = int(draw.integers(1, 61))
+    k = int(draw.integers(1, 9))
     q = 3
-    all_counts = rng.integers(0, 30, size=(q, parts * n_per)).astype(np.int32)
+    all_counts = draw.integers(0, 30, size=(q, parts * n_per)).astype(np.int32)
     per_ids, per_counts = [], []
     for pi in range(parts):
         seg = all_counts[:, pi * n_per : (pi + 1) * n_per]

@@ -28,8 +28,9 @@ def test_distributed_search_matches_oracle():
         import numpy as np, jax, jax.numpy as jnp
         from repro.core import distributed, match, cpq
         from repro.core.types import SearchParams
+        from repro.launch import mesh as mesh_lib
         for shape, axes in [((2,4), ('data','model')), ((2,2,2), ('pod','data','model'))]:
-            mesh = jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,)*len(axes))
+            mesh = mesh_lib.make_mesh(shape, axes)
             rng = np.random.default_rng(0)
             data = rng.integers(0, 6, (128, 16)).astype(np.int32)
             queries = rng.integers(0, 6, (4, 16)).astype(np.int32)
@@ -50,6 +51,7 @@ def test_sharded_train_step_matches_single_device():
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.launch import sharding as sh_lib
+        from repro.launch import mesh as sh_lib_mesh
         from repro.models.registry import get_api, get_config
         from repro.train import step as tsl
         from repro.data.pipeline import DataConfig, SyntheticTokens
@@ -62,8 +64,8 @@ def test_sharded_train_step_matches_single_device():
         params = api.init_params(cfg, jax.random.PRNGKey(0))
         l0 = float(loss_single(params, batch)[0])
 
-        mesh = jax.make_mesh((4, 2), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
-        with jax.sharding.set_mesh(mesh):
+        mesh = sh_lib_mesh.make_mesh((4, 2), ('data', 'model'))
+        with sh_lib_mesh.use_mesh(mesh):
             pshapes = jax.eval_shape(lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
             psh = sh_lib.params_shardings(pshapes, mesh, cfg.use_tp)
             bsh = sh_lib.batch_shardings({k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}, mesh, cfg.use_tp)
@@ -80,6 +82,7 @@ def test_elastic_restore_across_mesh_shapes(tmp_path):
         import numpy as np, jax
         from repro.checkpoint import checkpointer
         from repro.launch import sharding as sh_lib
+        from repro.launch import mesh as mesh_lib
         from repro.models.registry import get_api, get_config
         from repro.train import step as tsl
 
@@ -90,7 +93,7 @@ def test_elastic_restore_across_mesh_shapes(tmp_path):
 
         # restore onto a (2,4) mesh, then a (4,2) mesh: elastic reshard
         for shape in [(2, 4), (4, 2)]:
-            mesh = jax.make_mesh(shape, ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh = mesh_lib.make_mesh(shape, ('data', 'model'))
             pshapes = jax.eval_shape(lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
             psh = sh_lib.params_shardings(pshapes, mesh, cfg.use_tp)
             ssh = sh_lib.state_shardings(jax.eval_shape(

@@ -1,0 +1,185 @@
+"""MatchModel registry round-trip: every engine through every search path.
+
+The acceptance bar for the unified-engine refactor: all four engines (EQ,
+RANGE, MINSUM, IP) resolve through the registry with kernel-vs-reference
+parity, the count-dtype policy is engine-uniform, and multiload/distributed
+searches agree with single-device results.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GenieIndex, cpq, engines
+from repro.core.types import Engine, SearchParams, TopKMethod
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _case(engine: Engine, rng, n=96, q=4):
+    """(data, queries, max_count) for one engine, small enough for interpret
+    -mode kernels."""
+    if engine == Engine.EQ:
+        return (rng.integers(0, 8, (n, 12)).astype(np.int32),
+                rng.integers(0, 8, (q, 12)).astype(np.int32), None)
+    if engine == Engine.RANGE:
+        lo = rng.integers(0, 6, (q, 6)).astype(np.int32)
+        return (rng.integers(0, 10, (n, 6)).astype(np.int32), (lo, lo + 3), None)
+    if engine == Engine.MINSUM:
+        return (rng.integers(0, 4, (n, 16)).astype(np.int32),
+                rng.integers(0, 4, (q, 16)).astype(np.int32), 64)
+    return (rng.integers(0, 2, (n, 32)).astype(np.int32),
+            rng.integers(0, 2, (q, 32)).astype(np.int32), 32)
+
+
+ALL_ENGINES = [Engine.EQ, Engine.RANGE, Engine.MINSUM, Engine.IP]
+
+
+def test_all_engines_registered():
+    assert set(engines.available()) >= set(ALL_ENGINES)
+    for eng in ALL_ENGINES:
+        model = engines.get(eng)
+        assert model.engine == eng
+        assert engines.get(eng.value) is model          # string lookup
+        assert engines.get(model) is model              # idempotent
+
+
+def test_unknown_engine_raises():
+    with pytest.raises(ValueError):
+        engines.get("no-such-engine")
+
+
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+def test_kernel_matches_reference(engine, rng):
+    data, queries, mc = _case(engine, rng)
+    model = engines.get(engine)
+    ref = np.asarray(model.match_counts(model.prepare_data(data), queries, use_kernel=False))
+    ker = np.asarray(model.match_counts(model.prepare_data(data), queries, use_kernel=True))
+    assert np.array_equal(ref, ker)
+
+
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+def test_generic_build_equals_named_builder(engine, rng):
+    data, queries, mc = _case(engine, rng)
+    generic = GenieIndex.build(engine, data, max_count=mc, use_kernel=False)
+    named = {
+        Engine.EQ: lambda: GenieIndex.build_lsh(data, use_kernel=False),
+        Engine.RANGE: lambda: GenieIndex.build_relational(data, use_kernel=False),
+        Engine.MINSUM: lambda: GenieIndex.build_minsum(data, max_count=mc, use_kernel=False),
+        Engine.IP: lambda: GenieIndex.build_ip(data, max_count=mc, use_kernel=False),
+    }[engine]()
+    assert named.engine == generic.engine == engine
+    assert named.max_count == generic.max_count
+    assert named.stats.n_objects == generic.stats.n_objects
+    assert named.stats.total_postings == generic.stats.total_postings
+    a = generic.search(queries, k=7)
+    b = named.search(queries, k=7)
+    assert np.array_equal(np.asarray(a.counts), np.asarray(b.counts))
+    assert np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
+
+
+def test_build_requires_max_count_when_underivable(rng):
+    data, _, _ = _case(Engine.MINSUM, rng)
+    with pytest.raises(ValueError, match="max_count"):
+        GenieIndex.build(Engine.MINSUM, data)
+
+
+def test_count_dtype_policy():
+    model = engines.get(Engine.EQ)
+    assert model.count_dtype(100) == jnp.int8
+    assert model.count_dtype(1000) == jnp.int16
+    assert model.count_dtype(10**6) == jnp.int32
+
+
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+@pytest.mark.parametrize("method", [TopKMethod.CPQ, TopKMethod.SPQ, TopKMethod.SORT])
+def test_search_methods_agree_per_engine(engine, method, rng):
+    data, queries, mc = _case(engine, rng)
+    idx = GenieIndex.build(engine, data, max_count=mc, use_kernel=False)
+    got = idx.search(queries, k=9, method=method)
+    want = cpq.sort_select(idx.match_counts(queries),
+                           SearchParams(k=9, max_count=idx.max_count))
+    assert np.array_equal(np.asarray(got.counts), np.asarray(want.counts))
+
+
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+@pytest.mark.parametrize("n_parts", [1, 3, 5])
+def test_multiload_parity_all_engines(engine, n_parts, rng):
+    """Every registered engine streams through multiload, uneven splits
+    included (pad rows are engine-neutral and masked)."""
+    data, queries, mc = _case(engine, rng, n=97)   # uneven on purpose
+    idx = GenieIndex.build(engine, data, max_count=mc, use_kernel=False)
+    full = idx.search(queries, k=6)
+    part = idx.search_multiload(queries, k=6, n_parts=n_parts)
+    assert np.array_equal(np.asarray(full.counts), np.asarray(part.counts)), engine
+
+
+def test_distributed_parity_all_engines():
+    """All four engines through the sharded search step (8 forced CPU devices
+    via subprocess: jax locks the device count at first init)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC
+    env.pop("JAX_PLATFORMS", None)
+    code = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import distributed, engines, cpq
+        from repro.core.types import Engine, SearchParams
+        from repro.launch import mesh as mesh_lib
+
+        mesh = mesh_lib.make_mesh((2, 4), ('data', 'model'))
+        rng = np.random.default_rng(0)
+        cases = {
+            Engine.EQ: (rng.integers(0, 6, (128, 16)).astype(np.int32),
+                        jnp.asarray(rng.integers(0, 6, (4, 16)).astype(np.int32)), 16),
+            Engine.MINSUM: (rng.integers(0, 3, (128, 32)).astype(np.int32),
+                            jnp.asarray(rng.integers(0, 3, (4, 32)).astype(np.int32)), 96),
+            Engine.IP: (rng.integers(0, 2, (128, 32)).astype(np.int32),
+                        jnp.asarray(rng.integers(0, 2, (4, 32)).astype(np.int32)), 32),
+        }
+        lo = rng.integers(0, 5, (4, 6)).astype(np.int32)
+        cases[Engine.RANGE] = (rng.integers(0, 10, (128, 6)).astype(np.int32),
+                               (jnp.asarray(lo), jnp.asarray(lo + 3)), 6)
+        for eng, (data, queries, mx) in cases.items():
+            params = SearchParams(k=7, max_count=mx)
+            step = distributed.make_search_step(mesh, params, eng)
+            dd = jax.device_put(data, distributed.data_sharding(mesh))
+            qq = jax.tree_util.tree_map(
+                lambda x: jax.device_put(x, distributed.replicated(mesh, 2)), queries)
+            res = step(dd, qq)
+            counts = engines.get(eng).match_fn(False)(jnp.asarray(data), queries)
+            want = cpq.sort_select(counts, params)
+            assert np.array_equal(np.asarray(res.counts), np.asarray(want.counts)), eng
+        print('distributed registry parity OK')
+    """)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "distributed registry parity OK" in out.stdout
+
+
+def test_retrieval_service_incremental_add(rng):
+    """add() appends to the corpus instead of clobbering earlier adds."""
+    from repro.serve.retrieval import RetrievalService
+
+    pts = rng.standard_normal((120, 16)).astype(np.float32)
+    svc = RetrievalService(embed_fn=lambda x: np.asarray(x), m_override=96)
+    svc.add(list(range(60)), embeddings=pts[:60])
+    svc.add(list(range(60, 120)), embeddings=pts[60:])
+    assert len(svc) == 120
+    res, _ = svc.search(None, k=1, embeddings=pts[90:95] + 0.01)
+    assert np.array_equal(np.asarray(res.ids)[:, 0], np.arange(90, 95))
+
+
+def test_lsh_scheme_registry():
+    from repro.core import lsh
+
+    assert set(lsh.scheme_names()) >= {"e2lsh", "rbh", "simhash"}
+    scheme = lsh.get_scheme("e2lsh")
+    assert lsh.get_scheme(scheme) is scheme
+    with pytest.raises(KeyError):
+        lsh.get_scheme("no-such-scheme")

@@ -1,21 +1,27 @@
 """Shotgun-and-Assembly search (paper section V): n-grams, verification,
-documents, relational."""
+documents, relational.
+
+Formerly hypothesis property tests; rewritten as seeded-random parametrized
+cases so the tier-1 suite runs on environments without hypothesis.
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import GenieIndex, match
 from repro.core.sa import document, ngram, relational, verify
 
-SEQ = st.text(alphabet="abcd", min_size=0, max_size=24)
+
+def _rand_seq(draw, max_size=24) -> str:
+    return "".join(draw.choice(list("abcd"), size=int(draw.integers(0, max_size + 1))))
 
 
-@settings(max_examples=40, deadline=None)
-@given(s=SEQ, q=SEQ)
-def test_minsum_count_vectors_equal_exact_mc_when_no_collisions(s, q):
+@pytest.mark.parametrize("case", range(40))
+def test_minsum_count_vectors_equal_exact_mc_when_no_collisions(case):
     """Lemma 5.1 via count vectors: with a large bucket space (no collisions
     among these tiny alphabets), MINSUM == exact ordered-n-gram match count."""
+    draw = np.random.default_rng(6000 + case)
+    s, q = _rand_seq(draw), _rand_seq(draw)
     n, v = 3, 1 << 16
     cs = ngram.count_vector(s, n, v)
     cq = ngram.count_vector(q, n, v)
@@ -23,20 +29,23 @@ def test_minsum_count_vectors_equal_exact_mc_when_no_collisions(s, q):
     assert got == ngram.exact_match_count(s, q, n)
 
 
-@settings(max_examples=40, deadline=None)
-@given(s=SEQ, q=SEQ, v=st.integers(4, 64))
-def test_bucketised_mc_upper_bounds_exact(s, q, v):
+@pytest.mark.parametrize("case", range(40))
+def test_bucketised_mc_upper_bounds_exact(case):
     """min(a1+a2, b1+b2) >= min(a1,b1)+min(a2,b2): bucket collisions can only
     OVER-count, so the Theorem 5.1 filter never loses a true candidate."""
+    draw = np.random.default_rng(7000 + case)
+    s, q = _rand_seq(draw), _rand_seq(draw)
+    v = int(draw.integers(4, 65))
     n = 3
     cs = ngram.count_vector(s, n, v)
     cq = ngram.count_vector(q, n, v)
     assert int(np.minimum(cs, cq).sum()) >= ngram.exact_match_count(s, q, n)
 
 
-@settings(max_examples=30, deadline=None)
-@given(s=SEQ, q=SEQ)
-def test_count_filter_bound_theorem51(s, q):
+@pytest.mark.parametrize("case", range(30))
+def test_count_filter_bound_theorem51(case):
+    draw = np.random.default_rng(8000 + case)
+    s, q = _rand_seq(draw), _rand_seq(draw)
     """Theorem 5.1: MC >= max(|Q|,|S|) - n + 1 - ed*n."""
     n = 2
     if len(s) < n or len(q) < n:
@@ -59,12 +68,11 @@ def test_count_filter_bound_theorem51(s, q):
     assert mc >= bound
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    la=st.integers(0, 14), lb=st.integers(0, 14), seed=st.integers(0, 10**6)
-)
-def test_edit_distance_property(la, lb, seed):
-    rng = np.random.default_rng(seed)
+@pytest.mark.parametrize("case", range(30))
+def test_edit_distance_property(case):
+    draw = np.random.default_rng(9000 + case)
+    la, lb = int(draw.integers(0, 15)), int(draw.integers(0, 15))
+    rng = np.random.default_rng(int(draw.integers(0, 10**6)))
     a = rng.integers(0, 4, la)
     b = rng.integers(0, 4, lb)
     L = 16

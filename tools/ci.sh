@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# CI smoke: tier-1 test suite + one quickstart example end-to-end.
+#
+#   tools/ci.sh            # full tier-1 (ROADMAP.md) + quickstart
+#   tools/ci.sh --fast     # GENIE-core test modules only + quickstart
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+if [[ "${1:-}" == "--fast" ]]; then
+    python -m pytest -x -q \
+        tests/test_engines.py tests/test_cpq.py tests/test_multiload.py \
+        tests/test_kernels.py tests/test_system.py
+else
+    # tier-1 verify command from ROADMAP.md
+    python -m pytest -x -q
+fi
+
+echo "--- quickstart example ---"
+python examples/quickstart.py
+echo "CI smoke OK"

@@ -10,9 +10,12 @@ lowered by the multi-pod dry-run.
 
 Engines are resolved through the MatchModel registry (core/engines.py): pass
 an `Engine`, its string value, a `MatchModel`, or a raw canonical callable
-``fn(data, queries) -> counts`` -- all four registered engines (EQ, RANGE,
-MINSUM, IP) shard identically because the canonical signature hides the query
-pytree shape (RANGE replicates its (lo, hi) pair).
+``fn(data, queries) -> counts`` -- every registered engine (EQ, RANGE,
+MINSUM, IP, TANIMOTO, COSINE) shards identically because the canonical
+signature hides the query pytree shape (RANGE replicates its (lo, hi) pair).
+`SearchParams.use_kernel` selects the per-shard match implementation, so the
+Pallas kernels run *inside* shard_map on each shard's local partition --
+kernel dispatch is no longer reference-only at pod scale.
 
 Communication cost per query batch: S * Q * k * 8 bytes of (id, count) pairs
 -- independent of N, the point of shipping candidate buffers instead of
@@ -82,9 +85,12 @@ def make_search_step(
     data:    [N, ...] (N divisible by the total mesh size; sharded dim 0).
     queries: canonical query pytree, replicated (each leaf [Q, ...]).
     Returns replicated TopKResult with global object ids.
+
+    `params.use_kernel` picks the per-shard match path (Pallas kernel vs
+    jnp reference) when `match_fn` resolves through the registry.
     """
     axes = tuple(mesh.axis_names)
-    match = _engines.resolve_match_fn(match_fn)
+    match = _engines.resolve_match_fn(match_fn, params.use_kernel)
 
     def _local(data_local: jnp.ndarray, queries: Any) -> TopKResult:
         n_local = data_local.shape[0]
@@ -132,7 +138,7 @@ def make_hierarchical_search_step(
     if axes[0] != "pod":
         return make_search_step(mesh, params, match_fn)
     inner_axes = axes[1:]
-    match = _engines.resolve_match_fn(match_fn)
+    match = _engines.resolve_match_fn(match_fn, params.use_kernel)
 
     def _local(data_local: jnp.ndarray, queries: Any) -> TopKResult:
         n_local = data_local.shape[0]

@@ -2,8 +2,8 @@
 
 GENIE's central claim is *genericity* -- one inverted-index machinery serving
 many data types and similarity measures (paper section II).  This module makes
-that claim structural: every engine (EQ, RANGE, MINSUM, IP, and any future
-measure) is a single `MatchModel` descriptor bundling
+that claim structural: every engine (EQ, RANGE, MINSUM, IP, TANIMOTO, COSINE,
+and any future measure) is a single `MatchModel` descriptor bundling
 
   * the reference match function (core/match.py -- the semantics oracle),
   * the Pallas kernel wrapper (kernels/ops.py -- the TPU hot path),
@@ -58,6 +58,10 @@ class MatchModel:
     default_max_count: Callable[[jnp.ndarray], Optional[int]]
     # multiload row fill: padded rows must never beat real rows
     pad_value: Any = -1
+    # seeded conformance data: (np rng, n, q) -> (raw_data, raw_queries,
+    # max_count | None).  Engines that provide it get the engine-matrix
+    # parity/pad/tie conformance tests (tests/test_engine_matrix.py) for free.
+    example: Optional[Callable[[Any, int, int], tuple]] = None
 
     # -- dispatch -----------------------------------------------------------
     def match_fn(self, use_kernel: bool) -> Callable[[jnp.ndarray, Any], jnp.ndarray]:
@@ -169,6 +173,24 @@ def _kernel_ip(data, queries):
     return kops.ip_count(data, queries)
 
 
+def _kernel_tanimoto(data, queries):
+    from repro.kernels import ops as kops
+
+    return kops.tanimoto_count(data, queries)
+
+
+def _kernel_cosine(data, queries):
+    from repro.kernels import ops as kops
+
+    return kops.cosine_count(data, queries)
+
+
+def _sign_quantize(x) -> jnp.ndarray:
+    """Raw vectors -> {-1, +1} int8 (floats by sign; {0,1} bits map to -1/+1)."""
+    x = jnp.asarray(x)
+    return jnp.where(x > 0, 1, -1).astype(jnp.int8)
+
+
 register(MatchModel(
     engine=Engine.EQ,
     description="signature equality compare over LSH signatures int32 [N, m]",
@@ -179,6 +201,8 @@ register(MatchModel(
     postings_count=lambda a: int(a.shape[0]) * int(a.shape[1]),
     default_max_count=lambda a: int(a.shape[1]),          # m hash functions
     pad_value=-1,                                          # never equals a sig
+    example=lambda rng, n, q: (rng.integers(0, 8, (n, 16)).astype(np.int32),
+                               rng.integers(0, 8, (q, 16)).astype(np.int32), None),
 ))
 
 register(MatchModel(
@@ -192,6 +216,10 @@ register(MatchModel(
     postings_count=lambda a: int(a.size),
     default_max_count=lambda a: int(a.shape[1]),          # #attributes
     pad_value=np.iinfo(np.int32).min,                     # below any query lo
+    example=lambda rng, n, q: (
+        rng.integers(0, 10, (n, 6)).astype(np.int32),
+        (lambda lo: (lo, lo + 3))(rng.integers(0, 6, (q, 6)).astype(np.int32)),
+        None),
 ))
 
 register(MatchModel(
@@ -204,6 +232,8 @@ register(MatchModel(
     postings_count=lambda a: int(np.asarray(jnp.sum(a))),
     default_max_count=lambda a: None,                     # caller supplies bound
     pad_value=-1,                                          # min(-1, q) sums < 0
+    example=lambda rng, n, q: (rng.integers(0, 4, (n, 24)).astype(np.int32),
+                               rng.integers(0, 4, (q, 24)).astype(np.int32), 96),
 ))
 
 register(MatchModel(
@@ -216,4 +246,34 @@ register(MatchModel(
     postings_count=lambda a: int(np.asarray(jnp.sum(a.astype(jnp.int32)))),
     default_max_count=lambda a: None,                     # caller supplies bound
     pad_value=0,                                           # zero dot product
+    example=lambda rng, n, q: (rng.integers(0, 2, (n, 32)).astype(np.int32),
+                               rng.integers(0, 2, (q, 32)).astype(np.int32), 32),
+))
+
+register(MatchModel(
+    engine=Engine.TANIMOTO,
+    description="minhash collision count over set sketches int32 [N, m] (Jaccard MLE c/m)",
+    prepare_data=lambda x: jnp.asarray(x, dtype=jnp.int32),
+    prepare_queries=lambda q: jnp.asarray(q, dtype=jnp.int32),
+    reference=_match.match_tanimoto,
+    kernel=_kernel_tanimoto,
+    postings_count=lambda a: int(a.shape[0]) * int(a.shape[1]),
+    default_max_count=lambda a: int(a.shape[1]),          # m minhash functions
+    pad_value=-1,                                          # outside bucket range
+    example=lambda rng, n, q: (rng.integers(0, 64, (n, 20)).astype(np.int32),
+                               rng.integers(0, 64, (q, 20)).astype(np.int32), None),
+))
+
+register(MatchModel(
+    engine=Engine.COSINE,
+    description="sign-agreement count of sign-quantized vectors {-1,+1} [N, V] on the MXU",
+    prepare_data=_sign_quantize,
+    prepare_queries=_sign_quantize,
+    reference=_match.match_cosine,
+    kernel=_kernel_cosine,
+    postings_count=lambda a: int(a.size),                  # every sign is a posting
+    default_max_count=lambda a: int(a.shape[1]),          # V sign agreements max
+    pad_value=0,                                           # dot-neutral; id-masked
+    example=lambda rng, n, q: (rng.standard_normal((n, 32)).astype(np.float32),
+                               rng.standard_normal((q, 32)).astype(np.float32), None),
 ))

@@ -83,6 +83,20 @@ class GenieIndex:
         """RANGE engine over discretized tuples int32 [N, d]."""
         return cls.build(Engine.RANGE, discrete_tuples, use_kernel=use_kernel)
 
+    @classmethod
+    def build_tanimoto(cls, minhash_sigs, max_count: int | None = None,
+                       use_kernel: bool = True):
+        """TANIMOTO engine over minhash sketches int32 [N, m]."""
+        return cls.build(Engine.TANIMOTO, minhash_sigs, max_count=max_count,
+                         use_kernel=use_kernel)
+
+    @classmethod
+    def build_cosine(cls, vectors, max_count: int | None = None,
+                     use_kernel: bool = True):
+        """COSINE engine over raw vectors [N, V] (sign-quantized at build)."""
+        return cls.build(Engine.COSINE, vectors, max_count=max_count,
+                         use_kernel=use_kernel)
+
     # ------------------------------------------------------------------
     # Matching + selection
     # ------------------------------------------------------------------
@@ -117,8 +131,9 @@ class GenieIndex:
             fill = jnp.full((pad,) + data.shape[1:], model.pad_value, dtype=data.dtype)
             data = jnp.concatenate([data, fill], axis=0)
         chunks = data.reshape(n_parts, part, *data.shape[1:])
-        params = SearchParams(k=k, max_count=self.max_count, method=method)
+        params = SearchParams(k=k, max_count=self.max_count, method=method,
+                              use_kernel=self.use_kernel)
         return _multiload.multiload_search(
             chunks, model.prepare_queries(queries), params,
-            model.match_fn(use_kernel=False), n_objects=n,
+            model.match_fn(use_kernel=self.use_kernel), n_objects=n,
         )

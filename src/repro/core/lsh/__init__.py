@@ -20,17 +20,29 @@ import dataclasses
 from typing import Any, Callable
 
 from repro.core.lsh import e2lsh, minhash, rbh, rehash, simhash, tau_ann  # noqa: F401
+from repro.core.types import Engine
 
 
 @dataclasses.dataclass(frozen=True)
 class LshScheme:
-    """Descriptor for one LSH family (paper section IV)."""
+    """Descriptor for one LSH family (paper section IV).
+
+    `engine` names the MatchModel that consumes this family's signatures
+    (the transform <-> measure pairing: bucketed schemes count collisions
+    with EQ, minhash sketches with TANIMOTO, simhash bits with COSINE), and
+    `mle` inverts a match count into the similarity the family estimates.
+    Serving (serve/retrieval.py) resolves both by scheme name, so selecting a
+    scheme selects the whole engine stack.
+    """
 
     name: str
     description: str
     make: Callable[..., Any]                 # (key, *, d, m, **options) -> params
     hash_points: Callable[[Any, Any], Any]   # (params, x [..., d]) -> sigs [..., m]
     option_names: tuple[str, ...] = ()       # keyword options `make` accepts
+    engine: Engine = Engine.EQ               # match engine paired with the sigs
+    # (counts, m) -> similarity estimate; default is the tau-ANN MLE c/m (Eqn 7)
+    mle: Callable[[Any, int], Any] = tau_ann.mle_similarity
 
     def make_params(self, key, *, d: int, m: int, **options) -> Any:
         """Build scheme parameters, keeping only the options this family uses."""
@@ -83,4 +95,15 @@ register_scheme(LshScheme(
     make=simhash.make,
     hash_points=simhash.hash_points,
     option_names=(),
+    engine=Engine.COSINE,                 # bits become +-1 signs on the MXU
+    mle=simhash.mle_cosine,
+))
+
+register_scheme(LshScheme(
+    name="minhash",
+    description="minhash over positive-support feature sets for Jaccard (FLASH)",
+    make=minhash.make,
+    hash_points=minhash.hash_points,
+    option_names=("n_buckets",),
+    engine=Engine.TANIMOTO,               # sketch collisions count Jaccard
 ))

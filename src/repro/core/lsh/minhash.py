@@ -23,7 +23,10 @@ class MinHashParams:
     n_buckets: int = dataclasses.field(metadata=dict(static=True))
 
 
-def make(key, m: int, n_buckets: int = 8192) -> MinHashParams:
+def make(key, m: int, n_buckets: int = 8192, d: int | None = None) -> MinHashParams:
+    """`d` is accepted (and ignored) so the scheme registry's uniform
+    make_params(key, d=..., m=..., ...) call works -- minhash is
+    dimension-free (permutations act on element ids, not coordinates)."""
     k1, k2 = jax.random.split(key)
     return MinHashParams(
         seeds=_rehash.make_seeds(k1, m),
@@ -46,6 +49,20 @@ def hash_sets(params: MinHashParams, elements: jnp.ndarray, valid: jnp.ndarray) 
     perm = jnp.where(valid[..., None, :], perm, big)
     mins = jnp.min(perm, axis=-1)                          # [..., m]
     return _rehash.rehash(mins.astype(jnp.int32), params.rehash_seeds, params.n_buckets)
+
+
+def hash_points(params: MinHashParams, x: jnp.ndarray) -> jnp.ndarray:
+    """MinHash dense vectors via their positive-support feature set.
+
+    A vector x is read as the set {i : x_i > 0} (binarised feature support --
+    the sparse ultra-high-dimensional regime FLASH targets), then minhashed
+    with `hash_sets`.  Gives the scheme registry the uniform
+    hash_points(params, x [..., d]) -> sigs [..., m] signature.
+    """
+    x = jnp.asarray(x)
+    d = x.shape[-1]
+    elems = jnp.broadcast_to(jnp.arange(d, dtype=jnp.int32), x.shape)
+    return hash_sets(params, elems, x > 0)
 
 
 def jaccard(a_elems, a_valid, b_elems, b_valid) -> float:

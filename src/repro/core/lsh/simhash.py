@@ -16,6 +16,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @jax.tree_util.register_dataclass
@@ -31,6 +32,17 @@ def make(key, d: int, m: int) -> SimHashParams:
 def hash_points(params: SimHashParams, x: jnp.ndarray) -> jnp.ndarray:
     proj = jnp.einsum("...d,md->...m", x.astype(jnp.float32), params.v)
     return (proj >= 0).astype(jnp.int32)
+
+
+def mle_cosine(count, m: int):
+    """Cosine estimate from a sign-agreement count (the COSINE engine's MLE).
+
+    c agreements out of m bits give Pr[agree] = 1 - theta/pi (Charikar), so
+    theta_hat = pi * (1 - c/m) and cos_hat = cos(theta_hat).  Host-side, like
+    tau_ann.mle_similarity (Eqn 7).
+    """
+    frac = np.clip(np.asarray(count, dtype=np.float64) / float(m), 0.0, 1.0)
+    return np.cos(math.pi * (1.0 - frac))
 
 
 def similarity(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:

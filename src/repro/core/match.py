@@ -120,6 +120,63 @@ def match_minsum(data_cnt: jnp.ndarray, query_cnt: jnp.ndarray, chunk: int = 8) 
     return _scan_chunks(d, s, chunk, combine)
 
 
+def match_tanimoto(data_sigs: jnp.ndarray, query_sigs: jnp.ndarray, chunk: int = 8) -> jnp.ndarray:
+    """TANIMOTO engine: counts[q, n] = sum_i (data_sigs[n, i] == query_sigs[q, i])
+    over *minhash* signatures.
+
+    Pr[h(S) = h(T)] = J(S, T) for minhash (core/lsh/minhash.py), so the
+    collision count c is Binomial(m, J) and J_hat = c/m is the Jaccard MLE --
+    the sketch-collision counting at the heart of FLASH (Wang et al.,
+    1709.01190).  The arithmetic is the EQ compare; the engines differ in data
+    semantics (minhash sketches of sets vs. generic LSH signatures), count
+    interpretation, and kernel (kernels/tanimoto_count.py tiles the signature
+    axis through the grid for FLASH-scale m).
+    """
+    return match_eq(data_sigs, query_sigs, chunk=chunk)
+
+
+def tanimoto_exact(data_cnt: jnp.ndarray, query_cnt: jnp.ndarray, chunk: int = 8) -> jnp.ndarray:
+    """Exact (multiset) Tanimoto  sum_v min / sum_v max  -> float32 [Q, N].
+
+    The validation oracle for the TANIMOTO engine: on multiset count vectors
+    the engine's minhash-collision estimate J_hat = c/m converges to this
+    ratio (binary vectors give exactly set Jaccard).  Not a match-count --
+    GENIE counts stay integral; this is the similarity the counts estimate.
+    """
+    d = _pad_axis1(data_cnt.astype(jnp.int32), chunk, 0)
+    s = _pad_axis1(query_cnt.astype(jnp.int32), chunk, 0)
+
+    def combine_min(dcc, scc):
+        return jnp.sum(jnp.minimum(scc[:, None, :], dcc[None, :, :]), axis=-1)
+
+    mins = _scan_chunks(d, s, chunk, combine_min)
+    # min(a,b) + max(a,b) == a + b, so sum-max follows from row sums -- no
+    # second O(Q*N*V) scan.
+    maxs = jnp.sum(d, axis=-1)[None, :] + jnp.sum(s, axis=-1)[:, None] - mins
+    return mins.astype(jnp.float32) / jnp.maximum(maxs, 1).astype(jnp.float32)
+
+
+def match_cosine(data_sgn: jnp.ndarray, query_sgn: jnp.ndarray, chunk: int = 8) -> jnp.ndarray:
+    """COSINE engine: counts[q, n] = #sign agreements = (V + <s_q, s_n>) // 2.
+
+    data_sgn / query_sgn are sign-quantized vectors in {-1, +1} ([N, V] /
+    [Q, V]); the agreement count of simhash bits equals the shifted +-1 inner
+    product, which is what the Pallas kernel computes on the MXU
+    (kernels/cosine_count.py).  cos(theta) is estimated from the count by the
+    simhash angle MLE cos(pi * (1 - c/V)) (core/lsh/simhash.py).  V + dot is
+    even for genuine +-1 rows, so the halving is exact; zero pad rows floor.
+    """
+    v = int(data_sgn.shape[1])
+    d = _pad_axis1(data_sgn.astype(jnp.int32), chunk, 0)
+    s = _pad_axis1(query_sgn.astype(jnp.int32), chunk, 0)
+
+    def combine(dcc, scc):
+        return jnp.sum(scc[:, None, :] * dcc[None, :, :], axis=-1)
+
+    dot = _scan_chunks(d, s, chunk, combine)
+    return (v + dot) // 2
+
+
 def match_ip(data_bin: jnp.ndarray, query_bin: jnp.ndarray) -> jnp.ndarray:
     """IP engine: counts = query_bin @ data_bin^T (binary vectors; MXU matmul).
 

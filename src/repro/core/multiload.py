@@ -33,6 +33,18 @@ def _mask_invalid(gids: jnp.ndarray, counts: jnp.ndarray, n_objects: Optional[in
     return jnp.where(valid, gids, -1), jnp.where(valid, counts, -1)
 
 
+def _mask_pad_counts(counts: jnp.ndarray, offset, n_objects: Optional[int]) -> jnp.ndarray:
+    """Force pad columns (global id >= n_objects) to count -1 *before*
+    selection, so pad rows can never crowd real candidates out of the per-part
+    top-k buffer.  This makes pad safety structural for every engine: the
+    `pad_value` fill only has to be representable, not score-neutral (COSINE's
+    zero rows, for instance, score V/2 against any query)."""
+    if n_objects is None:
+        return counts
+    gcol = offset + jnp.arange(counts.shape[-1], dtype=jnp.int32)
+    return jnp.where((gcol < n_objects)[None, :], counts, -1)
+
+
 def multiload_search(
     chunks: jnp.ndarray,
     queries: Any,
@@ -61,7 +73,7 @@ def multiload_search(
     def step(carry, xs):
         best_ids, best_counts = carry
         part, chunk_idx = xs
-        counts = match_fn(part, queries)
+        counts = _mask_pad_counts(match_fn(part, queries), chunk_idx * nc, n_objects)
         local = select_topk(counts, params)
         global_ids = jnp.where(local.ids >= 0, local.ids + chunk_idx * nc, -1)
         gids, gcnt = _mask_invalid(global_ids, local.counts, n_objects)
@@ -86,7 +98,7 @@ def multiload_search_host(parts, queries, params, match_fn,
     offset = 0
     for part in parts:
         part = jax.device_put(part)
-        counts = match_fn(part, queries)
+        counts = _mask_pad_counts(match_fn(part, queries), offset, n_objects)
         local = select_topk(counts, params)
         gids = jnp.where(local.ids >= 0, local.ids + offset, -1)
         gids, gcnt = _mask_invalid(gids, local.counts, n_objects)

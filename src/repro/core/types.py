@@ -12,16 +12,21 @@ import jax.numpy as jnp
 class Engine(str, enum.Enum):
     """Match-count execution engines (see DESIGN.md section 2).
 
-    EQ      -- signature equality compare (LSH-transformed data).
-    RANGE   -- per-attribute interval predicate (relational data).
-    MINSUM  -- multiset intersection  sum_v min(c_data, c_query)  (SA n-grams).
-    IP      -- binary inner product on the MXU (SA documents / sets).
+    EQ       -- signature equality compare (LSH-transformed data).
+    RANGE    -- per-attribute interval predicate (relational data).
+    MINSUM   -- multiset intersection  sum_v min(c_data, c_query)  (SA n-grams).
+    IP       -- binary inner product on the MXU (SA documents / sets).
+    TANIMOTO -- minhash collision count estimating Jaccard over sets (FLASH).
+    COSINE   -- sign-agreement count of sign-quantized vectors on the MXU
+                (simhash-angle cosine, Johnson et al. 1702.08734).
     """
 
     EQ = "eq"
     RANGE = "range"
     MINSUM = "minsum"
     IP = "ip"
+    TANIMOTO = "tanimoto"
+    COSINE = "cosine"
 
 
 class TopKMethod(str, enum.Enum):

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: COSINE match-count (sign-agreement via +-1 MXU matmul).
+
+counts[q, n] = (V + sum_v query_sgn[q, v] * data_sgn[n, v]) / 2
+
+Sign-quantized (simhash-style) cosine at billion scale (Johnson et al.,
+1702.08734): the agreement count of sign bits equals the shifted +-1 inner
+product, so the compare rides the MXU as a tiled matmul -- bf16 +-1 inputs
+(exact products), f32 accumulation across the V grid axis, and the shift/halve
+fused into the last V step.  V + dot is even for +-1 rows, so the halving is
+exact in f32 up to 2^24; zero pad rows (multiload fill) floor and are masked
+upstream by global id.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_Q = 128
+TILE_N = 256
+TILE_V = 512
+
+
+def _cosine_kernel(q_ref, d_ref, o_ref, *, v_logical: int, n_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        q_ref[...], d_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_steps - 1)
+    def _finalize():
+        # agreements = (V + dot) / 2; floor matches the int reference exactly
+        # (V + dot is even whenever the row is genuinely +-1).
+        o_ref[...] = jnp.floor((v_logical + o_ref[...]) * 0.5)
+
+
+def cosine_count_pallas(
+    data_sgn: jnp.ndarray,
+    query_sgn: jnp.ndarray,
+    *,
+    v_logical: int,
+    tile_q: int = TILE_Q,
+    tile_n: int = TILE_N,
+    tile_v: int = TILE_V,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns f32 [Q, N] agreement counts (ops.py casts to int32).
+
+    Inputs are +-1 (bf16/f32/int) pre-padded by ops.py: zero-fill on the V
+    axis is dot-neutral, so `v_logical` (the unpadded V) sets the shift.
+    """
+    qn, v = query_sgn.shape
+    nn = data_sgn.shape[0]
+    assert qn % tile_q == 0 and nn % tile_n == 0 and v % tile_v == 0
+    grid = (qn // tile_q, nn // tile_n, v // tile_v)
+    kernel = functools.partial(
+        _cosine_kernel, v_logical=v_logical, n_steps=v // tile_v
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, tile_v), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tile_n, tile_v), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, tile_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qn, nn), jnp.float32),
+        interpret=interpret,
+    )(query_sgn.astype(jnp.bfloat16), data_sgn.astype(jnp.bfloat16))

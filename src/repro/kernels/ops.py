@@ -13,11 +13,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import common
+from repro.kernels import cosine_count as _cos
 from repro.kernels import cpq_hist as _cpq_hist
 from repro.kernels import ip_count as _ip
 from repro.kernels import match_count as _mc
 from repro.kernels import minsum_count as _ms
 from repro.kernels import range_count as _rc
+from repro.kernels import tanimoto_count as _tc
 
 # Padding sentinels: data and query pads differ so padded rows/cols never match.
 _PAD_DATA = -1
@@ -120,6 +122,61 @@ def ip_count(
         d, q, tile_q=tq, tile_n=tn, tile_v=tv, interpret=common.use_interpret(interpret)
     )
     return jnp.round(out[:qn, :nn]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_n", "tile_m", "interpret"))
+def tanimoto_count(
+    data_sigs: jnp.ndarray,
+    query_sigs: jnp.ndarray,
+    *,
+    tile_q: int | None = None,
+    tile_n: int | None = None,
+    tile_m: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """TANIMOTO engine kernel: minhash collision counts int32 [Q, N]."""
+    qn, m = query_sigs.shape
+    nn = data_sigs.shape[0]
+    tq, tn = _tiles(qn, nn, tile_q or _tc.TILE_Q, tile_n or _tc.TILE_N)
+    tm = common.pick_tile(m, tile_m or _tc.TILE_M, 128)
+    # Distinct sentinels on every padded axis: padded signature slots never
+    # collide, padded rows/cols are sliced away.
+    q = common.pad_to(common.pad_to(query_sigs.astype(jnp.int32), tq, 0, _PAD_QUERY),
+                      tm, 1, _PAD_QUERY)
+    d = common.pad_to(common.pad_to(data_sigs.astype(jnp.int32), tn, 0, _PAD_DATA),
+                      tm, 1, _PAD_DATA)
+    out = _tc.tanimoto_count_pallas(
+        d, q, tile_q=tq, tile_n=tn, tile_m=tm, interpret=common.use_interpret(interpret)
+    )
+    return out[:qn, :nn]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_n", "tile_v", "interpret"))
+def cosine_count(
+    data_sgn: jnp.ndarray,
+    query_sgn: jnp.ndarray,
+    *,
+    tile_q: int | None = None,
+    tile_n: int | None = None,
+    tile_v: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """COSINE engine kernel: sign-agreement counts int32 [Q, N].
+
+    Inputs are +-1 sign vectors (exact for counts < 2^24); zero V-padding is
+    dot-neutral and the kernel shifts by the logical V.
+    """
+    qn, v = query_sgn.shape
+    nn = data_sgn.shape[0]
+    tq, tn = _tiles(qn, nn, tile_q or _cos.TILE_Q, tile_n or _cos.TILE_N)
+    tv = common.pick_tile(v, tile_v or _cos.TILE_V, 128)
+    q = common.pad_to(common.pad_to(query_sgn.astype(jnp.float32), tq, 0, 0), tv, 1, 0)
+    d = common.pad_to(common.pad_to(data_sgn.astype(jnp.float32), tn, 0, 0), tv, 1, 0)
+    out = _cos.cosine_count_pallas(
+        d, q, v_logical=v, tile_q=tq, tile_n=tn, tile_v=tv,
+        interpret=common.use_interpret(interpret)
+    )
+    return out[:qn, :nn].astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("max_count", "tile_q", "tile_n", "interpret"))

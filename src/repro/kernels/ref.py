@@ -8,10 +8,13 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.match import (  # noqa: F401
+    match_cosine,
     match_eq,
     match_ip,
     match_minsum,
     match_range,
+    match_tanimoto,
+    tanimoto_exact,
 )
 
 

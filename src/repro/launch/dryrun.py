@@ -289,7 +289,10 @@ def run_genie_cell(dataset: str, mesh_kind: str) -> dict:
     n_dev = int(np.prod(mesh.devices.shape))
     n = ((ds.n_objects + n_dev - 1) // n_dev) * n_dev
     q = ds.queries_per_batch
-    params = SearchParams(k=ds.default_k, max_count=ds.m if ds.engine == "eq" else ds.dim)
+    # use_kernel=False: the dry-run lowers (and costs) the XLA fallback
+    # engine; the Pallas path is costed analytically below.
+    params = SearchParams(k=ds.default_k, use_kernel=False,
+                          max_count=ds.m if ds.engine == "eq" else ds.dim)
 
     # Input shapes/dtypes are dataset metadata; the match function itself is
     # resolved from the MatchModel registry by engine name inside
@@ -304,18 +307,18 @@ def run_genie_cell(dataset: str, mesh_kind: str) -> dict:
     elif ds.engine == "minsum":
         data_sds = jax.ShapeDtypeStruct((n, ds.m), jnp.int8)
         query_sds = jax.ShapeDtypeStruct((q, ds.m), jnp.int8)
-        params = SearchParams(k=ds.default_k, max_count=127)
+        params = SearchParams(k=ds.default_k, max_count=127, use_kernel=False)
     elif ds.engine == "ip":
         data_sds = jax.ShapeDtypeStruct((n, ds.m), jnp.int8)
         query_sds = jax.ShapeDtypeStruct((q, ds.m), jnp.int8)
-        params = SearchParams(k=ds.default_k, max_count=ds.dim * 4)
+        params = SearchParams(k=ds.default_k, max_count=ds.dim * 4, use_kernel=False)
     else:  # range: queries are the canonical (lo, hi) pytree
         data_sds = jax.ShapeDtypeStruct((n, ds.dim), jnp.int32)
         query_sds = (
             jax.ShapeDtypeStruct((q, ds.dim), jnp.int32),
             jax.ShapeDtypeStruct((q, ds.dim), jnp.int32),
         )
-        params = SearchParams(k=ds.default_k, max_count=ds.dim)
+        params = SearchParams(k=ds.default_k, max_count=ds.dim, use_kernel=False)
 
     t0 = time.time()
     with mesh_lib.use_mesh(mesh):

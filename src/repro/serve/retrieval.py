@@ -8,6 +8,13 @@ from the scheme registry (core/lsh/__init__.py), and a GenieIndex;
 serving (examples/serve_batch.py drives it at batch 1024+, the paper's
 throughput regime).
 
+Selecting a scheme by name selects the whole engine stack: each LshScheme
+names the match engine that consumes its signatures (e2lsh/rbh -> EQ bucket
+collisions, minhash -> TANIMOTO sketch collisions, simhash -> COSINE
+sign agreements on the MXU) and the MLE that converts match counts back to
+similarity estimates, so `RetrievalService(scheme="simhash")` serves
+quantized cosine and `scheme="minhash"` serves Jaccard with no other change.
+
 `add` may be called repeatedly: items append to the corpus and the index is
 rebuilt over the accumulated signatures (signatures are cached, so only the
 new items are hashed).
@@ -65,18 +72,23 @@ class RetrievalService:
         self._items.extend(list(items))
         self._sigs = sigs if self._sigs is None else jnp.concatenate(
             [self._sigs, sigs], axis=0)
-        self._index = GenieIndex.build_lsh(self._sigs, max_count=self.m)
+        self._index = GenieIndex.build(self._scheme.engine, self._sigs,
+                                       max_count=self.m)
 
     def __len__(self) -> int:
         return len(self._items)
 
     def search(self, queries, k: int = 10, *, embeddings: Optional[np.ndarray] = None,
                method: TopKMethod = TopKMethod.CPQ):
-        assert self._index is not None, "add() first"
+        if self._index is None:
+            # a real exception, not an assert: asserts vanish under python -O
+            raise ValueError("add() first")
         emb = self.embed_fn(queries) if embeddings is None else embeddings
         qsigs = self._hash(emb)
         res = self._index.search(qsigs, k=k, method=method)
-        sims = tau_ann.mle_similarity(np.asarray(res.counts), self.m)   # Eqn 7
+        # scheme-paired MLE: c/m for bucketed families (Eqn 7), the simhash
+        # angle inversion for COSINE
+        sims = self._scheme.mle(np.asarray(res.counts), self.m)
         return res, sims
 
     def items_for(self, result_ids: np.ndarray) -> list:

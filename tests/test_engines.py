@@ -1,9 +1,10 @@
 """MatchModel registry round-trip: every engine through every search path.
 
-The acceptance bar for the unified-engine refactor: all four engines (EQ,
-RANGE, MINSUM, IP) resolve through the registry with kernel-vs-reference
-parity, the count-dtype policy is engine-uniform, and multiload/distributed
-searches agree with single-device results.
+The acceptance bar for the unified-engine refactor: all six engines (EQ,
+RANGE, MINSUM, IP, TANIMOTO, COSINE) resolve through the registry with
+kernel-vs-reference parity, the count-dtype policy is engine-uniform, and
+multiload/distributed searches agree with single-device results.  The
+exhaustive engine x path x match-impl sweep lives in test_engine_matrix.py.
 """
 import os
 import subprocess
@@ -21,22 +22,14 @@ _SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 def _case(engine: Engine, rng, n=96, q=4):
-    """(data, queries, max_count) for one engine, small enough for interpret
-    -mode kernels."""
-    if engine == Engine.EQ:
-        return (rng.integers(0, 8, (n, 12)).astype(np.int32),
-                rng.integers(0, 8, (q, 12)).astype(np.int32), None)
-    if engine == Engine.RANGE:
-        lo = rng.integers(0, 6, (q, 6)).astype(np.int32)
-        return (rng.integers(0, 10, (n, 6)).astype(np.int32), (lo, lo + 3), None)
-    if engine == Engine.MINSUM:
-        return (rng.integers(0, 4, (n, 16)).astype(np.int32),
-                rng.integers(0, 4, (q, 16)).astype(np.int32), 64)
-    return (rng.integers(0, 2, (n, 32)).astype(np.int32),
-            rng.integers(0, 2, (q, 32)).astype(np.int32), 32)
+    """(raw data, raw queries, max_count) for one engine -- the descriptor's
+    own conformance generator (MatchModel.example), so there is exactly one
+    per-engine data recipe in the system."""
+    return engines.get(engine).example(rng, n, q)
 
 
-ALL_ENGINES = [Engine.EQ, Engine.RANGE, Engine.MINSUM, Engine.IP]
+ALL_ENGINES = [Engine.EQ, Engine.RANGE, Engine.MINSUM, Engine.IP,
+               Engine.TANIMOTO, Engine.COSINE]
 
 
 def test_all_engines_registered():
@@ -71,6 +64,8 @@ def test_generic_build_equals_named_builder(engine, rng):
         Engine.RANGE: lambda: GenieIndex.build_relational(data, use_kernel=False),
         Engine.MINSUM: lambda: GenieIndex.build_minsum(data, max_count=mc, use_kernel=False),
         Engine.IP: lambda: GenieIndex.build_ip(data, max_count=mc, use_kernel=False),
+        Engine.TANIMOTO: lambda: GenieIndex.build_tanimoto(data, use_kernel=False),
+        Engine.COSINE: lambda: GenieIndex.build_cosine(data, use_kernel=False),
     }[engine]()
     assert named.engine == generic.engine == engine
     assert named.max_count == generic.max_count
@@ -162,6 +157,37 @@ def test_distributed_parity_all_engines():
     assert "distributed registry parity OK" in out.stdout
 
 
+def test_retrieval_service_search_before_add_raises(rng):
+    """Regression: search() on an empty service raises ValueError (a bare
+    assert would vanish under python -O)."""
+    from repro.serve.retrieval import RetrievalService
+
+    svc = RetrievalService(embed_fn=lambda x: np.asarray(x), m_override=16)
+    with pytest.raises(ValueError, match=r"add\(\) first"):
+        svc.search(None, k=1, embeddings=rng.standard_normal((2, 8)).astype(np.float32))
+
+
+@pytest.mark.parametrize("scheme,engine", [("simhash", Engine.COSINE),
+                                           ("minhash", Engine.TANIMOTO),
+                                           ("e2lsh", Engine.EQ)])
+def test_retrieval_service_scheme_selects_engine(scheme, engine, rng):
+    """Selecting an LSH scheme by name selects its paired match engine and
+    similarity MLE end-to-end."""
+    from repro.serve.retrieval import RetrievalService
+
+    pts = rng.standard_normal((150, 16)).astype(np.float32)
+    svc = RetrievalService(embed_fn=lambda x: np.asarray(x), scheme=scheme,
+                           m_override=128)
+    svc.add(list(range(150)), embeddings=pts)
+    assert svc._index.engine == engine
+    res, sims = svc.search(None, k=3, embeddings=pts[40:45] + 0.01)
+    assert np.array_equal(np.asarray(res.ids)[:, 0], np.arange(40, 45))
+    assert sims.shape == (5, 3)
+    # self-similarity estimate must top each row and stay in the measure range
+    assert np.all(sims[:, 0] + 1e-9 >= sims[:, 1:].max(axis=-1))
+    assert sims.min() >= -1.0 and sims.max() <= 1.0
+
+
 def test_retrieval_service_incremental_add(rng):
     """add() appends to the corpus instead of clobbering earlier adds."""
     from repro.serve.retrieval import RetrievalService
@@ -178,8 +204,55 @@ def test_retrieval_service_incremental_add(rng):
 def test_lsh_scheme_registry():
     from repro.core import lsh
 
-    assert set(lsh.scheme_names()) >= {"e2lsh", "rbh", "simhash"}
+    assert set(lsh.scheme_names()) >= {"e2lsh", "rbh", "simhash", "minhash"}
     scheme = lsh.get_scheme("e2lsh")
     assert lsh.get_scheme(scheme) is scheme
     with pytest.raises(KeyError):
         lsh.get_scheme("no-such-scheme")
+    # scheme -> engine pairing used by serving
+    assert lsh.get_scheme("simhash").engine == Engine.COSINE
+    assert lsh.get_scheme("minhash").engine == Engine.TANIMOTO
+    assert lsh.get_scheme("e2lsh").engine == Engine.EQ
+
+
+def test_minhash_estimate_tracks_exact_tanimoto(rng):
+    """The TANIMOTO engine's collision counts converge to the exact
+    sum-min/sum-max oracle (binary multisets -> set Jaccard)."""
+    import jax
+
+    from repro.core import lsh as lsh_lib
+    from repro.core.match import tanimoto_exact
+
+    vecs = (rng.random((12, 64)) < 0.4).astype(np.float32)     # binary multisets
+    scheme = lsh_lib.get_scheme("minhash")
+    params = scheme.make_params(jax.random.PRNGKey(0), d=64, m=2000,
+                                n_buckets=1 << 20)
+    sigs = scheme.hash_points(params, jnp.asarray(vecs))
+    model = engines.get(Engine.TANIMOTO)
+    counts = np.asarray(model.match_counts(sigs, sigs, use_kernel=False))
+    est = counts / 2000.0
+    exact = np.asarray(tanimoto_exact(jnp.asarray(vecs, dtype=jnp.int32),
+                                      jnp.asarray(vecs, dtype=jnp.int32)))
+    assert np.allclose(np.diag(exact), 1.0)
+    assert np.abs(est - exact).max() < 0.05
+
+
+def test_simhash_mle_cosine_inverts_counts(rng):
+    """cos_hat = cos(pi(1 - c/m)) recovers the true cosine from COSINE-engine
+    counts on simhash bits."""
+    import jax
+
+    from repro.core import lsh as lsh_lib
+    from repro.core.lsh import simhash
+
+    x = rng.standard_normal((8, 16)).astype(np.float32)
+    scheme = lsh_lib.get_scheme("simhash")
+    params = scheme.make_params(jax.random.PRNGKey(1), d=16, m=4000)
+    sigs = scheme.hash_points(params, jnp.asarray(x))
+    model = engines.get(Engine.COSINE)
+    counts = np.asarray(model.match_counts(model.prepare_data(sigs), sigs,
+                                           use_kernel=False))
+    est = simhash.mle_cosine(counts, 4000)
+    xn = x / np.linalg.norm(x, axis=-1, keepdims=True)
+    true = xn @ xn.T
+    assert np.abs(est - true).max() < 0.08

@@ -52,6 +52,32 @@ def test_ip_count_sweep(q, n, v, rng):
     assert np.array_equal(got, want)
 
 
+@pytest.mark.parametrize("q,n,m", [(1, 5, 3), (3, 130, 17), (2, 90, 600)])
+def test_tanimoto_count_sweep(q, n, m, rng):
+    """Collision counts with the signature axis tiled through the grid
+    (FLASH-scale m streams through VMEM)."""
+    d = rng.integers(0, 64, size=(n, m)).astype(np.int32)
+    s = rng.integers(0, 64, size=(q, m)).astype(np.int32)
+    got = np.asarray(ops.tanimoto_count(jnp.asarray(d), jnp.asarray(s),
+                                        tile_q=8, tile_n=128, tile_m=128))
+    want = np.asarray(ref.match_tanimoto(jnp.asarray(d), jnp.asarray(s)))
+    assert got.shape == (q, n)
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("q,n,v", [(2, 90, 33), (4, 300, 256), (1, 40, 513)])
+def test_cosine_count_sweep(q, n, v, rng):
+    """Sign-agreement counts via the +-1 MXU matmul, odd V included (the
+    shift by logical V must ignore zero padding)."""
+    db = rng.choice(np.array([-1, 1], np.int8), size=(n, v))
+    qb = rng.choice(np.array([-1, 1], np.int8), size=(q, v))
+    got = np.asarray(ops.cosine_count(jnp.asarray(db), jnp.asarray(qb),
+                                      tile_q=8, tile_n=128, tile_v=128))
+    want = np.asarray(ref.match_cosine(jnp.asarray(db), jnp.asarray(qb)))
+    assert np.array_equal(got, want)
+    assert got.min() >= 0 and got.max() <= v
+
+
 @pytest.mark.parametrize("q,n,mx", [(2, 100, 9), (4, 513, 31), (8, 64, 127)])
 def test_cpq_hist_sweep(q, n, mx, rng):
     counts = rng.integers(0, mx + 1, size=(q, n)).astype(np.int32)

@@ -1,17 +1,24 @@
 #!/usr/bin/env bash
-# CI smoke: tier-1 test suite + one quickstart example end-to-end.
+# CI smoke: engine-conformance fast lane, then the tier-1 test suite + one
+# quickstart example end-to-end.
 #
-#   tools/ci.sh            # full tier-1 (ROADMAP.md) + quickstart
-#   tools/ci.sh --fast     # GENIE-core test modules only + quickstart
+#   tools/ci.sh            # matrix lane + full tier-1 (ROADMAP.md) + quickstart
+#   tools/ci.sh --fast     # matrix lane + GENIE-core test modules + quickstart
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+# Fast lane: the engine x {reference,kernel} x {search,multiload} conformance
+# matrix runs first so an engine-contract break fails in minutes (the
+# distributed leg needs a multi-device subprocess and runs with the suite).
+echo "--- engine conformance matrix (fast lane) ---"
+python -m pytest -q -k "matrix and not distributed" tests/test_engine_matrix.py
+
 if [[ "${1:-}" == "--fast" ]]; then
     python -m pytest -x -q \
-        tests/test_engines.py tests/test_cpq.py tests/test_multiload.py \
-        tests/test_kernels.py tests/test_system.py
+        tests/test_engines.py tests/test_engine_matrix.py tests/test_cpq.py \
+        tests/test_multiload.py tests/test_kernels.py tests/test_system.py
 else
     # tier-1 verify command from ROADMAP.md
     python -m pytest -x -q

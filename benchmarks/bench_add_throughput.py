@@ -1,0 +1,110 @@
+"""Add-throughput micro-benchmark: segmented append vs rebuild-on-add.
+
+`RetrievalService.add` used to rebuild the whole GenieIndex on every call,
+so appending B equal batches cost O(N^2/B) device work.  The segmented path
+(core/segments.py) seals each batch into an immutable segment: per-add cost
+must stay flat in corpus size.  This benchmark appends B equal batches both
+ways, times every add, and emits a machine-readable line
+
+    BENCH {"name": "add_throughput", ...}
+
+consumed by tools/ci.sh.  The flatness check is a loose 4x bound on
+(last-half median / first-half median) of segmented per-add time -- the
+rebuild path's same ratio is reported alongside for contrast (it grows
+with B).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+
+
+def _per_add_seconds(add_fn, batches) -> list[float]:
+    import jax
+
+    ts = []
+    for batch in batches:
+        t0 = time.perf_counter()
+        out = add_fn(batch)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return ts
+
+
+def run(n_batches: int = 12, batch: int = 2048, m: int = 64, d: int = 16,
+        warmup: int = 2) -> list[Row]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import GenieIndex, SegmentedIndex
+    from repro.core import lsh as lsh_lib
+    from repro.core.types import Engine
+
+    rng = np.random.default_rng(0)
+    scheme = lsh_lib.get_scheme("e2lsh")
+    params = scheme.make_params(jax.random.PRNGKey(0), d=d, m=m, w=4.0,
+                                n_buckets=1024)
+    batches = [
+        np.asarray(scheme.hash_points(
+            params, jnp.asarray(rng.standard_normal((batch, d)).astype(np.float32))))
+        for _ in range(warmup + n_batches)
+    ]
+
+    # segmented append: O(batch) per call
+    seg = SegmentedIndex(engine=Engine.EQ, max_count=m, use_kernel=False)
+    seg_ts = _per_add_seconds(lambda b: seg.add(b).data, batches)[warmup:]
+
+    # rebuild-on-add (the old RetrievalService.add): O(corpus) per call
+    acc: list[np.ndarray] = []
+
+    def rebuild(b):
+        acc.append(b)
+        return GenieIndex.build(Engine.EQ, np.concatenate(acc, axis=0),
+                                max_count=m, use_kernel=False).data
+
+    rb_ts = _per_add_seconds(rebuild, batches)[warmup:]
+
+    half = len(seg_ts) // 2
+    # median per half: robust to a single GC pause / noisy-neighbor stall,
+    # which would flake a mean-based CI gate
+    ratio = lambda ts: float(np.median(ts[half:]) / max(np.median(ts[:half]), 1e-12))
+    report = dict(
+        name="add_throughput",
+        n_batches=n_batches, batch=batch, m=m,
+        corpus_final=int(seg.n_objects),
+        segmented_us_per_add=[round(t * 1e6, 1) for t in seg_ts],
+        rebuild_us_per_add=[round(t * 1e6, 1) for t in rb_ts],
+        segmented_lastfirst_ratio=round(ratio(seg_ts), 3),
+        rebuild_lastfirst_ratio=round(ratio(rb_ts), 3),
+        flat=bool(ratio(seg_ts) < 4.0),
+    )
+    print("BENCH " + json.dumps(report), flush=True)
+    _LAST_REPORT.update(report)
+    return [
+        Row("add_throughput.segmented_mean", float(np.mean(seg_ts)) * 1e6,
+            f"ratio={report['segmented_lastfirst_ratio']}"),
+        Row("add_throughput.rebuild_mean", float(np.mean(rb_ts)) * 1e6,
+            f"ratio={report['rebuild_lastfirst_ratio']}"),
+    ]
+
+
+_LAST_REPORT: dict = {}
+
+
+def main() -> None:
+    for r in run():
+        print(r.csv())
+    # acceptance gate: per-add cost flat in corpus size (O(batch), not O(N))
+    if not _LAST_REPORT.get("flat"):
+        raise SystemExit(
+            f"add throughput NOT flat: segmented last/first ratio "
+            f"{_LAST_REPORT.get('segmented_lastfirst_ratio')}"
+        )
+
+
+if __name__ == "__main__":
+    main()

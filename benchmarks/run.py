@@ -10,6 +10,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        bench_add_throughput,
         fig8_num_hash,
         fig9_multiquery,
         fig10_datasize,
@@ -26,7 +27,7 @@ def main() -> None:
     modules = [
         fig8_num_hash, fig9_multiquery, fig10_datasize, fig12_load_balance,
         table1_profiling, table2_multiload, fig13_cpq, fig14_approx_ratio,
-        table5_knn_predict, table6_sequence,
+        table5_knn_predict, table6_sequence, bench_add_throughput,
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -3,9 +3,11 @@
 # merge).  Engine dispatch lives in the MatchModel registry (core/engines.py);
 # top-k selection is the shared select_topk pipeline (core/select.py).
 from repro.core import (  # noqa: F401
-    cpq, distributed, engines, index, match, merge, multiload, postings, select, spq,
+    cpq, distributed, engines, index, match, merge, multiload, postings, segments,
+    select, spq,
 )
 from repro.core.engines import MatchModel  # noqa: F401
 from repro.core.index import GenieIndex  # noqa: F401
+from repro.core.segments import SegmentedIndex  # noqa: F401
 from repro.core.select import select_topk  # noqa: F401
 from repro.core.types import Engine, SearchParams, TopKMethod, TopKResult  # noqa: F401

@@ -31,6 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import engines as _engines
 from repro.core import merge as _merge
+from repro.core.multiload import _mask_pad_counts
 from repro.core.select import select_topk
 from repro.core.types import Engine, SearchParams, TopKResult
 
@@ -79,6 +80,7 @@ def make_search_step(
     mesh: jax.sharding.Mesh,
     params: SearchParams,
     match_fn: MatchLike,
+    n_objects: int | None = None,
 ) -> Callable[[jnp.ndarray, Any], TopKResult]:
     """Build the jittable distributed search step.
 
@@ -88,15 +90,22 @@ def make_search_step(
 
     `params.use_kernel` picks the per-shard match path (Pallas kernel vs
     jnp reference) when `match_fn` resolves through the registry.
+
+    `n_objects` enables the *segmented* shard layout: data is segments
+    concatenated in global-id order and padded up to mesh divisibility
+    (SegmentedIndex.concat_data), and rows with global id >= n_objects are
+    pad fill -- their counts are forced to -1 before per-shard selection so
+    they can never reach any candidate buffer.
     """
     axes = tuple(mesh.axis_names)
     match = _engines.resolve_match_fn(match_fn, params.use_kernel)
 
     def _local(data_local: jnp.ndarray, queries: Any) -> TopKResult:
         n_local = data_local.shape[0]
-        counts = match(data_local, queries)
-        local = select_topk(counts, params)
         shard = shard_linear_index(axes)
+        counts = _mask_pad_counts(match(data_local, queries),
+                                  shard * n_local, n_objects)
+        local = select_topk(counts, params)
         gids = jnp.where(local.ids >= 0, local.ids + shard * n_local, -1)
         # Gather every shard's candidate buffer: [S, Q, k].
         all_ids = jax.lax.all_gather(gids, axis_name=axes, axis=0, tiled=False)
@@ -125,6 +134,7 @@ def make_hierarchical_search_step(
     mesh: jax.sharding.Mesh,
     params: SearchParams,
     match_fn: MatchLike,
+    n_objects: int | None = None,
 ):
     """Two-level merge variant: reduce candidate buffers inside a pod first
     (cheap ICI), then across pods (expensive DCN) -- merge order does not
@@ -132,19 +142,21 @@ def make_hierarchical_search_step(
     inter-pod traffic drops from S*Q*k to P_pods*Q*k pairs.
 
     Only meaningful on meshes with a leading "pod" axis; falls back to the
-    flat merge otherwise.
+    flat merge otherwise.  `n_objects` masks segmented-layout pad rows,
+    exactly as in `make_search_step`.
     """
     axes = tuple(mesh.axis_names)
     if axes[0] != "pod":
-        return make_search_step(mesh, params, match_fn)
+        return make_search_step(mesh, params, match_fn, n_objects=n_objects)
     inner_axes = axes[1:]
     match = _engines.resolve_match_fn(match_fn, params.use_kernel)
 
     def _local(data_local: jnp.ndarray, queries: Any) -> TopKResult:
         n_local = data_local.shape[0]
-        counts = match(data_local, queries)
-        local = select_topk(counts, params)
         shard = shard_linear_index(axes)
+        counts = _mask_pad_counts(match(data_local, queries),
+                                  shard * n_local, n_objects)
+        local = select_topk(counts, params)
         gids = jnp.where(local.ids >= 0, local.ids + shard * n_local, -1)
         # level 1: merge within the pod (over data/model axes).
         ids_in = jax.lax.all_gather(gids, axis_name=inner_axes, axis=0, tiled=False)

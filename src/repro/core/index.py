@@ -22,6 +22,7 @@ import dataclasses
 import time
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import engines as _engines
@@ -55,6 +56,9 @@ class GenieIndex:
         t0 = time.time()
         arr = model.prepare_data(data)
         stats = model.build_stats(arr)
+        # block: prepare_data dispatches async jnp ops; without this the
+        # timer reports dispatch time, not build time
+        jax.block_until_ready(arr)
         stats.build_seconds = time.time() - t0
         return cls(engine=model.engine,
                    max_count=model.resolve_max_count(arr, max_count),
@@ -122,6 +126,8 @@ class GenieIndex:
         Works for every registered engine: parts are padded with the engine's
         neutral fill and pad rows are masked out of the merged result.
         """
+        if n_parts < 1:
+            raise ValueError(f"n_parts must be >= 1, got {n_parts}")
         model = self.model
         n = self.stats.n_objects
         part = -(-n // n_parts)

@@ -38,6 +38,26 @@ def merge_topk(ids: jnp.ndarray, counts: jnp.ndarray, k: int) -> TopKResult:
     return TopKResult(ids=out_ids, counts=out_counts, threshold=out_counts[:, -1])
 
 
+def merge_ragged(ids_list, counts_list, k: int) -> TopKResult:
+    """Merge per-part top-k buffers of *heterogeneous* widths.
+
+    ids_list/counts_list: per-part int32 [Q, kp_i] buffers (kp_i may differ --
+    a part smaller than k contributes only min(k, n_part) candidates), ids
+    already globalised.  Parts must partition the object set and arrive in
+    ascending global-id order: the flattened candidate row is then globally
+    id-ascending within equal counts, so the stable selection reproduces the
+    monolithic (count desc, id asc) ordering exactly.
+    """
+    ids = jnp.concatenate(ids_list, axis=-1)
+    counts = jnp.concatenate(counts_list, axis=-1)
+    if ids.shape[-1] < k:  # fewer total candidates than k: pad empty slots
+        pad = jnp.full((ids.shape[0], k - ids.shape[-1]), -1, dtype=jnp.int32)
+        ids = jnp.concatenate([ids, pad], axis=-1)
+        counts = jnp.concatenate([counts, pad], axis=-1)
+    out_ids, out_counts = _cpq.topk_from_candidates(ids, counts, k)
+    return TopKResult(ids=out_ids, counts=out_counts, threshold=out_counts[:, -1])
+
+
 def merge_two(
     ids_a: jnp.ndarray, counts_a: jnp.ndarray, ids_b: jnp.ndarray, counts_b: jnp.ndarray, k: int
 ):

@@ -15,6 +15,7 @@ passes the ``(lo, hi)`` pair) since they are closed over, not scanned.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, Optional
 
 import jax
@@ -90,7 +91,12 @@ def multiload_search_host(parts, queries, params, match_fn,
                           n_objects: Optional[int] = None) -> TopKResult:
     """Host-loop variant: `parts` is a python list of per-part arrays that are
     device_put one at a time (the literal paper strategy -- parts live in host
-    memory and are swapped through the device)."""
+    memory and are swapped through the device).
+
+    Parts may have *heterogeneous* sizes (SegmentedIndex streams its sealed
+    segments through here); a part smaller than k contributes only
+    min(k, n_part) candidates.
+    """
     q = jax.tree_util.tree_leaves(queries)[0].shape[0]
     k = params.k
     best_ids = jnp.full((q, k), -1, dtype=jnp.int32)
@@ -99,7 +105,8 @@ def multiload_search_host(parts, queries, params, match_fn,
     for part in parts:
         part = jax.device_put(part)
         counts = _mask_pad_counts(match_fn(part, queries), offset, n_objects)
-        local = select_topk(counts, params)
+        local = select_topk(counts,
+                            dataclasses.replace(params, k=min(k, int(part.shape[0]))))
         gids = jnp.where(local.ids >= 0, local.ids + offset, -1)
         gids, gcnt = _mask_invalid(gids, local.counts, n_objects)
         ids = jnp.concatenate([best_ids, gids[:, :k]], axis=-1)

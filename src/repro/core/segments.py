@@ -1,0 +1,237 @@
+"""SegmentedIndex: incremental append + compaction over immutable segments.
+
+`RetrievalService.add` used to rebuild its GenieIndex from scratch on every
+call, so filling a corpus of N items in B batches cost O(N^2/B) device work
+and re-uploaded all signatures each time.  This module fixes that bug the way
+FAISS shards billion-scale GPU indexes (Johnson et al. 1702.08734): each
+`add()` seals the batch into an immutable per-segment `GenieIndex` (O(batch)
+device work), `search()` runs the dense match + shared `select_topk` per
+segment and merges the cap-sized candidate buffers with core/merge, and
+`compact(max_segments)` coalesces adjacent segments so steady-state search
+cost stays flat as the corpus grows.
+
+The merge is exact, not approximate: segments *partition* the object set, so
+an object's match count is computed entirely inside its own segment (the same
+invariant multiload streaming and the distributed shard merge already rely
+on).  Any global top-k member is a top-min(k, n_seg) member of its segment,
+hence per-segment buffers of width min(k, n_seg) always contain the global
+top-k, and the merged ordering (count desc, global id asc) is identical to a
+monolithic search -- ids and counts match exactly for every registered
+engine (tests/test_segments.py).
+
+Compaction only ever merges *adjacent* segments: global ids are assigned by
+cumulative segment offset in append order, and concatenating neighbours
+preserves that order, so compaction never remaps an id.
+
+    seg = SegmentedIndex(Engine.EQ)
+    seg.add(sigs_batch_0)              # seals segment 0
+    seg.add(sigs_batch_1)              # seals segment 1 -- no rebuild
+    res = seg.search(queries, k=10)    # == monolithic GenieIndex search
+    seg.compact(max_segments=1)        # coalesce; ids unchanged
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engines as _engines
+from repro.core import merge as _merge
+from repro.core import multiload as _multiload
+from repro.core.index import GenieIndex
+from repro.core.select import select_topk
+from repro.core.types import Engine, IndexStats, SearchParams, TopKMethod, TopKResult
+
+
+def even_segments(n_objects: int, n_segments: int) -> list[int]:
+    """Row counts of an even split of `n_objects` into `n_segments` parts."""
+    if n_segments < 1:
+        raise ValueError(f"n_segments must be >= 1, got {n_segments}")
+    base, rem = divmod(n_objects, n_segments)
+    return [base + (1 if i < rem else 0) for i in range(n_segments)]
+
+
+def layout_accounting(segment_rows, row_bytes: int) -> dict:
+    """Host-side accounting for a segmented layout (surfaced by launch/dryrun)."""
+    rows = [int(r) for r in segment_rows]
+    return dict(
+        n_segments=len(rows),
+        segment_rows=rows,
+        total_rows=sum(rows),
+        bytes_per_segment=[r * int(row_bytes) for r in rows],
+        bytes_total=sum(rows) * int(row_bytes),
+    )
+
+
+@dataclasses.dataclass
+class SegmentedIndex:
+    """An append-only sequence of immutable per-batch GenieIndex segments.
+
+    `max_count` may be left None: the first `add` resolves it through the
+    engine's derived bound (engines without one -- MINSUM, IP -- require it
+    up front, exactly like `GenieIndex.build`), and every later segment is
+    pinned to the same bound so counts stay comparable across segments.
+    """
+
+    engine: Engine
+    max_count: Optional[int] = None
+    use_kernel: bool = True
+    segments: list[GenieIndex] = dataclasses.field(default_factory=list)
+    compaction_count: int = 0
+    compaction_seconds: float = 0.0
+
+    # ------------------------------------------------------------------
+    @property
+    def model(self) -> _engines.MatchModel:
+        return _engines.get(self.engine)
+
+    @property
+    def n_objects(self) -> int:
+        return sum(s.stats.n_objects for s in self.segments)
+
+    def __len__(self) -> int:
+        return self.n_objects
+
+    @property
+    def segment_rows(self) -> list[int]:
+        return [s.stats.n_objects for s in self.segments]
+
+    @property
+    def stats(self) -> IndexStats:
+        """Aggregate IndexStats with per-segment build/compaction accounting."""
+        segs = self.segments
+        return IndexStats(
+            n_objects=self.n_objects,
+            n_lists=segs[0].stats.n_lists if segs else 0,
+            total_postings=sum(s.stats.total_postings for s in segs),
+            max_list_len=max((s.stats.max_list_len for s in segs), default=0),
+            bytes_device=sum(s.stats.bytes_device for s in segs),
+            build_seconds=sum(s.stats.build_seconds for s in segs),
+            n_segments=len(segs),
+            segment_rows=self.segment_rows,
+            segment_build_seconds=[s.stats.build_seconds for s in segs],
+            compaction_count=self.compaction_count,
+            compaction_seconds=self.compaction_seconds,
+            extra={"engine": self.engine.value},
+        )
+
+    # ------------------------------------------------------------------
+    # Append
+    # ------------------------------------------------------------------
+    def add(self, raw_data) -> GenieIndex:
+        """Seal one batch into a new immutable segment: O(batch) device work,
+        no re-hash or re-upload of earlier segments."""
+        import numpy as np
+
+        shape = np.shape(raw_data)
+        if not shape or shape[0] == 0:
+            # an empty segment would poison every later search (0-row match)
+            raise ValueError(f"cannot add an empty batch (shape {shape})")
+        seg = GenieIndex.build(self.engine, raw_data, max_count=self.max_count,
+                               use_kernel=self.use_kernel)
+        if self.segments:
+            want = self.segments[0].data.shape[1:]
+            if seg.data.shape[1:] != want:
+                raise ValueError(
+                    f"segment width mismatch: existing segments hold "
+                    f"{tuple(want)} rows, new batch holds {tuple(seg.data.shape[1:])}"
+                )
+        if self.max_count is None:
+            self.max_count = seg.max_count
+        self.segments.append(seg)
+        return seg
+
+    # ------------------------------------------------------------------
+    # Search: per-segment match + select, exact cap-buffer merge
+    # ------------------------------------------------------------------
+    def search(self, queries, k: int, method: TopKMethod = TopKMethod.CPQ,
+               candidate_cap: int | None = None) -> TopKResult:
+        if not self.segments:
+            raise ValueError("empty SegmentedIndex: add() first")
+        model = self.model
+        q = model.prepare_queries(queries)
+        match = model.match_fn(self.use_kernel)
+        buf_ids, buf_counts = [], []
+        offset = 0
+        for seg in self.segments:
+            n_seg = seg.stats.n_objects
+            params = SearchParams(k=min(k, n_seg), max_count=self.max_count,
+                                  method=method, candidate_cap=candidate_cap,
+                                  use_kernel=self.use_kernel)
+            local = select_topk(match(seg.data, q), params,
+                                use_fused_hist=self.use_kernel)
+            buf_ids.append(jnp.where(local.ids >= 0, local.ids + offset, -1))
+            buf_counts.append(local.counts)
+            offset += n_seg
+        return _merge.merge_ragged(buf_ids, buf_counts, k)
+
+    def search_multiload(self, queries, k: int,
+                         method: TopKMethod = TopKMethod.CPQ) -> TopKResult:
+        """Stream the segments through the device one at a time (paper
+        section III-D's host loop) -- segments of heterogeneous sizes are the
+        parts, so nothing is re-concatenated or re-padded."""
+        if not self.segments:
+            raise ValueError("empty SegmentedIndex: add() first")
+        model = self.model
+        params = SearchParams(k=k, max_count=self.max_count, method=method,
+                              use_kernel=self.use_kernel)
+        return _multiload.multiload_search_host(
+            [s.data for s in self.segments], model.prepare_queries(queries),
+            params, model.match_fn(self.use_kernel), n_objects=self.n_objects,
+        )
+
+    # ------------------------------------------------------------------
+    # Compaction
+    # ------------------------------------------------------------------
+    def compact(self, max_segments: int = 1) -> None:
+        """Coalesce adjacent segments (smallest combined pair first) until at
+        most `max_segments` remain.  Global ids are preserved: neighbours
+        concatenate in append order.  O(n) device copy, no re-hash."""
+        if max_segments < 1:
+            raise ValueError(f"max_segments must be >= 1, got {max_segments}")
+        if len(self.segments) <= max_segments:
+            return
+        model = self.model
+        segs = list(self.segments)
+        t_total = 0.0
+        while len(segs) > max_segments:
+            sizes = [s.stats.n_objects for s in segs]
+            i = min(range(len(segs) - 1), key=lambda j: sizes[j] + sizes[j + 1])
+            t0 = time.time()
+            arr = jnp.concatenate([segs[i].data, segs[i + 1].data], axis=0)
+            stats = model.build_stats(arr)
+            jax.block_until_ready(arr)
+            t_total += time.time() - t0
+            # the merged segment keeps its sources' *build* time; the concat
+            # cost is compaction accounting, not build accounting
+            stats.build_seconds = (segs[i].stats.build_seconds
+                                   + segs[i + 1].stats.build_seconds)
+            segs[i:i + 2] = [GenieIndex(engine=self.engine, max_count=self.max_count,
+                                        data=arr, stats=stats,
+                                        use_kernel=self.use_kernel)]
+        self.segments = segs
+        self.compaction_count += 1
+        self.compaction_seconds += t_total
+
+    # ------------------------------------------------------------------
+    # Export for the distributed (sharded) layout
+    # ------------------------------------------------------------------
+    def concat_data(self, pad_multiple: int = 1) -> tuple[jnp.ndarray, int]:
+        """(data, n_objects) for the distributed shard layout: segments
+        concatenated in global-id order, row count padded up to a multiple of
+        `pad_multiple` with the engine's pad fill.  Pass `n_objects` to
+        `distributed.make_search_step` so pad rows are masked out of every
+        shard's candidate buffer."""
+        if not self.segments:
+            raise ValueError("empty SegmentedIndex: add() first")
+        data = jnp.concatenate([s.data for s in self.segments], axis=0)
+        n = int(data.shape[0])
+        pad = (-n) % max(pad_multiple, 1)
+        if pad:
+            fill = jnp.full((pad,) + data.shape[1:], self.model.pad_value,
+                            dtype=data.dtype)
+            data = jnp.concatenate([data, fill], axis=0)
+        return data, n

@@ -72,7 +72,12 @@ class SearchParams:
 
 @dataclasses.dataclass
 class IndexStats:
-    """Host-side statistics recorded at index-build time."""
+    """Host-side statistics recorded at index-build time.
+
+    The segment fields describe a SegmentedIndex (core/segments.py): a
+    monolithic GenieIndex is the degenerate single-segment case
+    (`n_segments=1`, empty per-segment lists, no compactions).
+    """
 
     n_objects: int = 0
     n_lists: int = 0
@@ -80,4 +85,10 @@ class IndexStats:
     max_list_len: int = 0
     bytes_device: int = 0
     build_seconds: float = 0.0
+    # per-segment build/compaction accounting (core/segments.py)
+    n_segments: int = 1
+    segment_rows: list[int] = dataclasses.field(default_factory=list)
+    segment_build_seconds: list[float] = dataclasses.field(default_factory=list)
+    compaction_count: int = 0
+    compaction_seconds: float = 0.0
     extra: dict[str, Any] = dataclasses.field(default_factory=dict)

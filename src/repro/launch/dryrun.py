@@ -322,10 +322,15 @@ def run_genie_cell(dataset: str, mesh_kind: str) -> dict:
 
     t0 = time.time()
     with mesh_lib.use_mesh(mesh):
+        # segmented shard layout: data is segments concatenated in global-id
+        # order and padded up to mesh divisibility (SegmentedIndex.concat_data);
+        # n_objects masks the ragged pad tail out of every shard's buffer.
         step = (
-            dist.make_hierarchical_search_step(mesh, params, ds.engine)
+            dist.make_hierarchical_search_step(mesh, params, ds.engine,
+                                               n_objects=ds.n_objects)
             if mesh_kind == "multi"
-            else dist.make_search_step(mesh, params, ds.engine)
+            else dist.make_search_step(mesh, params, ds.engine,
+                                       n_objects=ds.n_objects)
         )
         lowered = step.lower(data_sds, query_sds)
         compiled = lowered.compile()
@@ -356,6 +361,19 @@ def run_genie_cell(dataset: str, mesh_kind: str) -> dict:
         # match cost: Q*N signature compares (the paper's "match" stage)
         model_flops=float(q) * n * (ds.m if ds.engine != "range" else ds.dim),
         kernel_model=dict(flops=kernel_flops, bytes_accessed=kernel_bytes),
+    )
+    # per-segment accounting for the streaming-ingest plan (core/segments.py):
+    # the corpus arrives in 16 add()-sized batches, compacted 2:1 at serve
+    # time; pad_rows is the ragged tail masked by the n_objects layout above.
+    from repro.core import segments as seg_lib
+
+    ingest_rows = seg_lib.even_segments(ds.n_objects, 16)
+    rep["segmented"] = dict(
+        pad_rows=int(n - ds.n_objects),
+        ingest=seg_lib.layout_accounting(ingest_rows, width * sig_bytes),
+        compacted=seg_lib.layout_accounting(
+            [sum(ingest_rows[i:i + 2]) for i in range(0, len(ingest_rows), 2)],
+            width * sig_bytes),
     )
     return rep
 

@@ -37,7 +37,13 @@ class ServeEngine:
 
     def generate(self, batch: dict, max_new_tokens: int, *, greedy: bool = True,
                  temperature: float = 1.0, seed: int = 0) -> tuple[np.ndarray, ServeStats]:
+        if max_new_tokens < 0:
+            raise ValueError(f"max_new_tokens must be >= 0, got {max_new_tokens}")
         stats = ServeStats()
+        if max_new_tokens == 0:
+            # nothing to decode: empty [B, 0] output, zeroed stats, no prefill
+            b = jax.tree_util.tree_leaves(batch)[0].shape[0]
+            return np.zeros((b, 0), dtype=np.int32), stats
         t0 = time.time()
         logits, cache, pos = self._prefill(self.params, batch, cache_cap=self.cache_cap)
         logits.block_until_ready()

@@ -3,7 +3,7 @@ feature.
 
 A RetrievalService wraps an embedding function (e.g. mean-pooled hidden
 states of any registered LM, or raw feature vectors), an LSH scheme resolved
-from the scheme registry (core/lsh/__init__.py), and a GenieIndex;
+from the scheme registry (core/lsh/__init__.py), and a SegmentedIndex;
 `add`/`search` give tau-ANN document retrieval for retrieval-augmented
 serving (examples/serve_batch.py drives it at batch 1024+, the paper's
 throughput regime).
@@ -15,9 +15,13 @@ sign agreements on the MXU) and the MLE that converts match counts back to
 similarity estimates, so `RetrievalService(scheme="simhash")` serves
 quantized cosine and `scheme="minhash"` serves Jaccard with no other change.
 
-`add` may be called repeatedly: items append to the corpus and the index is
-rebuilt over the accumulated signatures (signatures are cached, so only the
-new items are hashed).
+`add` may be called repeatedly: each batch is hashed once and sealed into an
+immutable index *segment* (core/segments.py) -- O(batch) device work per
+call, no rebuild or re-upload of earlier batches.  When the segment count
+exceeds `max_segments` the index compacts adjacent segments down to
+`max_segments // 2`, so steady-state search cost stays flat while adds stay
+cheap.  Search merges per-segment candidate buffers exactly (segments
+partition the object set), so results are identical to a monolithic rebuild.
 """
 from __future__ import annotations
 
@@ -28,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GenieIndex, TopKMethod
+from repro.core import SegmentedIndex, TopKMethod
 from repro.core import lsh as lsh_lib
 from repro.core.lsh import tau_ann
 
@@ -44,14 +48,17 @@ class RetrievalService:
     sigma: float = 1.0
     seed: int = 0
     m_override: Optional[int] = None
+    max_segments: int = 16                         # compaction trigger for add()
 
     def __post_init__(self):
         self.m = self.m_override or tau_ann.required_m(self.eps, self.delta)
+        if self.max_segments < 1:
+            raise ValueError(f"max_segments must be >= 1, got {self.max_segments}")
         self._scheme = lsh_lib.get_scheme(self.scheme)
         self._params = None
-        self._index: Optional[GenieIndex] = None
+        self._dim: Optional[int] = None
+        self._index: Optional[SegmentedIndex] = None
         self._items: list = []
-        self._sigs: Optional[jnp.ndarray] = None
 
     def _make_params(self, d: int):
         key = jax.random.PRNGKey(self.seed)
@@ -60,30 +67,60 @@ class RetrievalService:
             w=self.w, sigma=self.sigma, n_buckets=self.n_buckets,
         )
 
-    def _hash(self, x: np.ndarray) -> jnp.ndarray:
+    def _hash(self, x: np.ndarray):
         return self._scheme.hash_points(self._params, jnp.asarray(x))
 
+    def _embed(self, items, embeddings: Optional[np.ndarray], expect_rows=None):
+        emb = self.embed_fn(items) if embeddings is None else np.asarray(embeddings)
+        if emb.ndim != 2:
+            raise ValueError(f"embeddings must be [n, d], got shape {emb.shape}")
+        if expect_rows is not None and emb.shape[0] != expect_rows:
+            raise ValueError(
+                f"embeddings row count {emb.shape[0]} != {expect_rows} "
+                f"items/queries"
+            )
+        if self._dim is not None and emb.shape[-1] != self._dim:
+            raise ValueError(
+                f"embedding dim {emb.shape[-1]} != dim {self._dim} fixed by the "
+                f"first add(); the LSH parameters are built once per service"
+            )
+        return emb
+
     def add(self, items, embeddings: Optional[np.ndarray] = None) -> None:
-        """Add items to the corpus (appends; the index covers every add)."""
-        emb = self.embed_fn(items) if embeddings is None else embeddings
+        """Add items to the corpus: hashes the batch once and seals it into a
+        new index segment (O(batch) device work; earlier segments untouched)."""
+        items = list(items)
+        if not items:
+            raise ValueError("cannot add an empty batch of items")
+        emb = self._embed(items, embeddings, expect_rows=len(items))
         if self._params is None:
-            self._params = self._make_params(emb.shape[-1])
-        sigs = self._hash(emb)
-        self._items.extend(list(items))
-        self._sigs = sigs if self._sigs is None else jnp.concatenate(
-            [self._sigs, sigs], axis=0)
-        self._index = GenieIndex.build(self._scheme.engine, self._sigs,
-                                       max_count=self.m)
+            self._dim = int(emb.shape[-1])
+            self._params = self._make_params(self._dim)
+        if self._index is None:
+            self._index = SegmentedIndex(engine=self._scheme.engine,
+                                         max_count=self.m)
+        self._index.add(self._hash(emb))
+        self._items.extend(items)
+        if len(self._index.segments) > self.max_segments:
+            self._index.compact(max(1, self.max_segments // 2))
 
     def __len__(self) -> int:
         return len(self._items)
+
+    @property
+    def index_stats(self):
+        """Aggregate IndexStats with per-segment build/compaction accounting."""
+        if self._index is None:
+            raise ValueError("add() first")
+        return self._index.stats
 
     def search(self, queries, k: int = 10, *, embeddings: Optional[np.ndarray] = None,
                method: TopKMethod = TopKMethod.CPQ):
         if self._index is None:
             # a real exception, not an assert: asserts vanish under python -O
             raise ValueError("add() first")
-        emb = self.embed_fn(queries) if embeddings is None else embeddings
+        emb = self._embed(queries, embeddings,
+                          expect_rows=None if queries is None else len(queries))
         qsigs = self._hash(emb)
         res = self._index.search(qsigs, k=k, method=method)
         # scheme-paired MLE: c/m for bucketed families (Eqn 7), the simhash

@@ -24,6 +24,23 @@ def test_generate_batch(arch):
     assert np.array_equal(toks, toks2)
 
 
+def test_generate_zero_new_tokens():
+    """Regression: max_new_tokens=0 used to IndexError on outs[0]; it must
+    return an empty [B, 0] batch with zeroed stats (and no device work)."""
+    cfg = get_config("phi3-mini-3.8b-smoke")
+    api = get_api(cfg)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, api, params, cache_cap=64)
+    batch = SyntheticTokens(cfg, DataConfig(global_batch=3, seq_len=16)).batch(0)
+    toks, stats = eng.generate(batch, max_new_tokens=0)
+    assert toks.shape == (3, 0)
+    assert toks.dtype == np.int32
+    assert stats.tokens_generated == 0
+    assert stats.prefill_seconds == 0.0 and stats.decode_seconds == 0.0
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.generate(batch, max_new_tokens=-1)
+
+
 def test_generate_sampled_differs_by_seed():
     cfg = get_config("phi3-mini-3.8b-smoke")
     api = get_api(cfg)

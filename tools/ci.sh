@@ -15,6 +15,9 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 echo "--- engine conformance matrix (fast lane) ---"
 python -m pytest -q -k "matrix and not distributed" tests/test_engine_matrix.py
 
+echo "--- segment/merge conformance (segmented == monolithic) ---"
+python -m pytest -q -k "not distributed" tests/test_segments.py
+
 if [[ "${1:-}" == "--fast" ]]; then
     python -m pytest -x -q \
         tests/test_engines.py tests/test_engine_matrix.py tests/test_cpq.py \
@@ -26,4 +29,7 @@ fi
 
 echo "--- quickstart example ---"
 python examples/quickstart.py
+
+echo "--- add-throughput micro-benchmark (BENCH JSON; fails if not flat) ---"
+PYTHONPATH=".:$PYTHONPATH" python benchmarks/bench_add_throughput.py
 echo "CI smoke OK"

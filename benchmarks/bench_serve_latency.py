@@ -1,0 +1,91 @@
+"""Serve-latency micro-benchmark: p50 query latency, cached vs uncached plan.
+
+The unified planner (core/plan.py) caches compiled executables per
+(engine, layout shape, k, method, use_kernel), so a serving process pays the
+trace/compile cost once per plan shape and every later query reuses the
+compiled program.  This benchmark drives `RetrievalService.search` end to
+end (hash -> plan -> execute -> MLE) and reports
+
+    BENCH {"name": "serve_latency", ...}
+
+with the first-search latency on a cold plan cache (trace + compile + run),
+the p50/p90 of warm repeat searches (cache hits), and the measured speedup.
+The gate is deliberately loose -- a warm search merely must not be *slower*
+than the cold one -- because CPU CI wall-times are noisy; the interesting
+number is the ratio, consumed by tools/ci.sh and EXPERIMENTS-style tracking.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+
+
+def _one_search(svc, q, k):
+    import jax
+
+    t0 = time.perf_counter()
+    res, _ = svc.search(None, k=k, embeddings=q)
+    jax.block_until_ready((res.ids, res.counts))
+    return (time.perf_counter() - t0) * 1e6
+
+
+def run(n: int = 8192, d: int = 16, m: int = 64, batches: int = 4,
+        q_batch: int = 64, k: int = 10, repeats: int = 15) -> list[Row]:
+    from repro.core import plan as plan_lib
+    from repro.serve.retrieval import RetrievalService
+
+    rng = np.random.default_rng(0)
+    pts = rng.standard_normal((n, d)).astype(np.float32)
+    svc = RetrievalService(embed_fn=lambda x: np.asarray(x), m_override=m)
+    per = n // batches
+    for i in range(batches):
+        svc.add(list(range(i * per, (i + 1) * per)),
+                embeddings=pts[i * per:(i + 1) * per])
+    q = pts[rng.integers(0, n, q_batch)] + 0.01
+
+    plan_lib.clear_plan_cache()
+    uncached_us = _one_search(svc, q, k)            # trace + compile + run
+    warm_us = sorted(_one_search(svc, q, k) for _ in range(repeats))
+    p50 = warm_us[len(warm_us) // 2]
+    p90 = warm_us[int(len(warm_us) * 0.9)]
+
+    report = dict(
+        name="serve_latency",
+        corpus=n, q_batch=q_batch, k=k, m=m, segments=batches,
+        uncached_first_us=round(uncached_us, 1),
+        cached_p50_us=round(p50, 1),
+        cached_p90_us=round(p90, 1),
+        plan_cache_entries=plan_lib.plan_cache_size(),
+        speedup_cold_over_warm=round(uncached_us / max(p50, 1e-9), 2),
+        warm_not_slower=bool(p50 <= uncached_us * 1.5),
+    )
+    print("BENCH " + json.dumps(report), flush=True)
+    _LAST_REPORT.update(report)
+    return [
+        Row("serve_latency.uncached_first", uncached_us,
+            f"entries={report['plan_cache_entries']}"),
+        Row("serve_latency.cached_p50", p50,
+            f"speedup={report['speedup_cold_over_warm']}"),
+    ]
+
+
+_LAST_REPORT: dict = {}
+
+
+def main() -> None:
+    for r in run():
+        print(r.csv())
+    if not _LAST_REPORT.get("warm_not_slower"):
+        raise SystemExit(
+            f"plan cache not effective: warm p50 "
+            f"{_LAST_REPORT.get('cached_p50_us')}us vs first "
+            f"{_LAST_REPORT.get('uncached_first_us')}us"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -2,11 +2,17 @@
 
 Objects are partitioned across *every* mesh axis (a pure data-parallel object
 shard -- the match-count of an object depends only on its own data row),
-queries are replicated, each shard runs the dense match + shared `select_topk`
-on its local partition, and the per-shard Hash-Table buffers are merged with
-an all-gather + small-buffer select (core/merge.py).  This is the paper's
-multiple-loading merge turned into a collective, and is the `search_step`
-lowered by the multi-pod dry-run.
+queries are replicated, each shard runs the dense match + top-k on its local
+partition, and the per-shard Hash-Table buffers are merged with an
+all-gather + small-buffer select.  This is the paper's multiple-loading merge
+turned into a collective, and is the `search_step` lowered by the multi-pod
+dry-run.
+
+Both step builders are thin adapters over the unified planner (core/plan.py):
+they describe the search as a DISTRIBUTED `QueryPlan` and return the planner's
+compiled executable, so the shard_map body -- match dispatch, pad masking,
+selection, collective merge -- lives in exactly one place and is cached per
+(engine, layout, k, method, use_kernel) across repeated step constructions.
 
 Engines are resolved through the MatchModel registry (core/engines.py): pass
 an `Engine`, its string value, a `MatchModel`, or a raw canonical callable
@@ -30,50 +36,27 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import engines as _engines
-from repro.core import merge as _merge
-from repro.core.multiload import _mask_pad_counts
-from repro.core.select import select_topk
+from repro.core import plan as _plan
 from repro.core.types import Engine, SearchParams, TopKResult
 
-# jax >= 0.6 promotes shard_map to the top level (keyword `check_vma`);
-# earlier releases keep it in jax.experimental (keyword `check_rep`).
-try:
-    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
-
-    _CHECK_KW = "check_vma"
-except ImportError:  # pragma: no cover - depends on installed jax
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-    _CHECK_KW = "check_rep"
+# Back-compat re-exports: the version-portable shard_map shims moved into the
+# executor module with the shard_map body itself.
+shard_map_compat = _plan.shard_map_compat
+shard_linear_index = _plan._shard_linear_index
 
 MatchLike = Union[Engine, str, "_engines.MatchModel",
                   Callable[[jnp.ndarray, Any], jnp.ndarray]]
 
 
-def shard_map_compat(f, mesh, in_specs, out_specs):
-    """Version-portable shard_map with replication checking disabled."""
-    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                      **{_CHECK_KW: False})
-
-
-def _axis_size(name: str) -> jnp.ndarray:
-    # jax.lax.axis_size is newer-jax; psum(1) is its portable equivalent
-    # (constant-folded at trace time).
-    if hasattr(jax.lax, "axis_size"):
-        return jax.lax.axis_size(name)
-    return jax.lax.psum(1, name)
-
-
-def shard_linear_index(axes: tuple[str, ...]) -> jnp.ndarray:
-    """Linearised shard index over the given mesh axes (row-major)."""
-    idx = jnp.int32(0)
-    for name in axes:
-        idx = idx * _axis_size(name) + jax.lax.axis_index(name)
-    return idx
-
-
-def _out_specs() -> TopKResult:
-    return TopKResult(ids=P(None, None), counts=P(None, None), threshold=P(None))
+def _plan_sharded(mesh: jax.sharding.Mesh, params: SearchParams,
+                  match_fn: MatchLike, n_objects: int | None,
+                  hierarchical: bool) -> _plan.QueryPlan:
+    return _plan.plan_search(
+        match_fn, params.k, params.max_count, layout=_plan.Layout.DISTRIBUTED,
+        n_objects=n_objects, method=params.method,
+        candidate_cap=params.candidate_cap, use_kernel=params.use_kernel,
+        hierarchical=hierarchical, mesh_axes=tuple(mesh.axis_names),
+    )
 
 
 def make_search_step(
@@ -97,37 +80,8 @@ def make_search_step(
     pad fill -- their counts are forced to -1 before per-shard selection so
     they can never reach any candidate buffer.
     """
-    axes = tuple(mesh.axis_names)
-    match = _engines.resolve_match_fn(match_fn, params.use_kernel)
-
-    def _local(data_local: jnp.ndarray, queries: Any) -> TopKResult:
-        n_local = data_local.shape[0]
-        shard = shard_linear_index(axes)
-        counts = _mask_pad_counts(match(data_local, queries),
-                                  shard * n_local, n_objects)
-        local = select_topk(counts, params)
-        gids = jnp.where(local.ids >= 0, local.ids + shard * n_local, -1)
-        # Gather every shard's candidate buffer: [S, Q, k].
-        all_ids = jax.lax.all_gather(gids, axis_name=axes, axis=0, tiled=False)
-        all_counts = jax.lax.all_gather(local.counts, axis_name=axes, axis=0, tiled=False)
-        merged = _merge.merge_topk(all_ids, all_counts, params.k)
-        return merged
-
-    sharded = shard_map_compat(
-        _local, mesh,
-        in_specs=(P(axes), P(None, None)),
-        out_specs=_out_specs(),
-    )
-    return jax.jit(sharded)
-
-
-def data_sharding(mesh: jax.sharding.Mesh) -> jax.sharding.NamedSharding:
-    """NamedSharding for the object-partitioned data matrix [N, ...]."""
-    return jax.sharding.NamedSharding(mesh, P(tuple(mesh.axis_names)))
-
-
-def replicated(mesh: jax.sharding.Mesh, ndim: int) -> jax.sharding.NamedSharding:
-    return jax.sharding.NamedSharding(mesh, P(*([None] * ndim)))
+    plan = _plan_sharded(mesh, params, match_fn, n_objects, hierarchical=False)
+    return _plan.executable(plan, mesh=mesh)
 
 
 def make_hierarchical_search_step(
@@ -145,31 +99,15 @@ def make_hierarchical_search_step(
     flat merge otherwise.  `n_objects` masks segmented-layout pad rows,
     exactly as in `make_search_step`.
     """
-    axes = tuple(mesh.axis_names)
-    if axes[0] != "pod":
-        return make_search_step(mesh, params, match_fn, n_objects=n_objects)
-    inner_axes = axes[1:]
-    match = _engines.resolve_match_fn(match_fn, params.use_kernel)
+    hier = tuple(mesh.axis_names)[0] == "pod"
+    plan = _plan_sharded(mesh, params, match_fn, n_objects, hierarchical=hier)
+    return _plan.executable(plan, mesh=mesh)
 
-    def _local(data_local: jnp.ndarray, queries: Any) -> TopKResult:
-        n_local = data_local.shape[0]
-        shard = shard_linear_index(axes)
-        counts = _mask_pad_counts(match(data_local, queries),
-                                  shard * n_local, n_objects)
-        local = select_topk(counts, params)
-        gids = jnp.where(local.ids >= 0, local.ids + shard * n_local, -1)
-        # level 1: merge within the pod (over data/model axes).
-        ids_in = jax.lax.all_gather(gids, axis_name=inner_axes, axis=0, tiled=False)
-        cnt_in = jax.lax.all_gather(local.counts, axis_name=inner_axes, axis=0, tiled=False)
-        pod_merged = _merge.merge_topk(ids_in, cnt_in, params.k)
-        # level 2: merge across pods.
-        ids_out = jax.lax.all_gather(pod_merged.ids, axis_name=("pod",), axis=0, tiled=False)
-        cnt_out = jax.lax.all_gather(pod_merged.counts, axis_name=("pod",), axis=0, tiled=False)
-        return _merge.merge_topk(ids_out, cnt_out, params.k)
 
-    sharded = shard_map_compat(
-        _local, mesh,
-        in_specs=(P(axes), P(None, None)),
-        out_specs=_out_specs(),
-    )
-    return jax.jit(sharded)
+def data_sharding(mesh: jax.sharding.Mesh) -> jax.sharding.NamedSharding:
+    """NamedSharding for the object-partitioned data matrix [N, ...]."""
+    return jax.sharding.NamedSharding(mesh, P(tuple(mesh.axis_names)))
+
+
+def replicated(mesh: jax.sharding.Mesh, ndim: int) -> jax.sharding.NamedSharding:
+    return jax.sharding.NamedSharding(mesh, P(*([None] * ndim)))

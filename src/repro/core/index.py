@@ -4,9 +4,10 @@ Holds device-resident transformed data (signatures / count vectors / binary
 vectors / discretized tuples) and resolves *everything* engine-specific --
 data preparation, query canonicalisation, kernel-vs-reference match dispatch,
 index statistics, count-domain bounds -- through the MatchModel registry
-(core/engines.py).  Top-k selection goes through the shared `select_topk`
-pipeline (core/select.py) for every path: single-device, multiload streaming,
-and the distributed step in core/distributed.py.
+(core/engines.py).  Searches are thin adapters over the unified planner
+(core/plan.py): `search` builds a MONOLITHIC QueryPlan, `search_multiload`
+a MULTILOAD plan, and both delegate to the one executor that owns match
+dispatch, pad masking, top-k selection, and merging (docs/EXECUTION.md).
 
     index = GenieIndex.build(Engine.EQ, sigs)            # generic builder
     index = GenieIndex.build_lsh(sigs, max_count=m)      # named alias
@@ -26,9 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engines as _engines
-from repro.core import multiload as _multiload
-from repro.core.select import select_topk
-from repro.core.types import Engine, IndexStats, SearchParams, TopKMethod, TopKResult
+from repro.core import plan as _plan
+from repro.core.types import Engine, IndexStats, TopKMethod, TopKResult
 
 
 @dataclasses.dataclass
@@ -114,32 +114,25 @@ class GenieIndex:
 
     def search(self, queries, k: int, method: TopKMethod = TopKMethod.CPQ,
                candidate_cap: int | None = None) -> TopKResult:
-        params = SearchParams(k=k, max_count=self.max_count, method=method,
-                              candidate_cap=candidate_cap, use_kernel=self.use_kernel)
-        counts = self.match_counts(queries)
-        return select_topk(counts, params, use_fused_hist=self.use_kernel)
+        plan = _plan.plan_search(
+            self.engine, k, self.max_count, layout=_plan.Layout.MONOLITHIC,
+            part_rows=(self.stats.n_objects,), method=method,
+            candidate_cap=candidate_cap, use_kernel=self.use_kernel,
+        )
+        return _plan.execute(plan, self.data, self.model.prepare_queries(queries))
 
     def search_multiload(self, queries, k: int, n_parts: int,
                          method: TopKMethod = TopKMethod.CPQ) -> TopKResult:
         """Paper section III-D: split this index into parts and stream them.
 
-        Works for every registered engine: parts are padded with the engine's
-        neutral fill and pad rows are masked out of the merged result.
+        Works for every registered engine: the planned layout pads parts with
+        the engine's neutral fill and the executor masks pad rows out of the
+        merged result.
         """
-        if n_parts < 1:
-            raise ValueError(f"n_parts must be >= 1, got {n_parts}")
-        model = self.model
-        n = self.stats.n_objects
-        part = -(-n // n_parts)
-        pad = part * n_parts - n
-        data = self.data
-        if pad:
-            fill = jnp.full((pad,) + data.shape[1:], model.pad_value, dtype=data.dtype)
-            data = jnp.concatenate([data, fill], axis=0)
-        chunks = data.reshape(n_parts, part, *data.shape[1:])
-        params = SearchParams(k=k, max_count=self.max_count, method=method,
-                              use_kernel=self.use_kernel)
-        return _multiload.multiload_search(
-            chunks, model.prepare_queries(queries), params,
-            model.match_fn(use_kernel=self.use_kernel), n_objects=n,
+        plan = _plan.plan_search(
+            self.engine, k, self.max_count, layout=_plan.Layout.MULTILOAD,
+            n_parts=n_parts, n_objects=self.stats.n_objects, method=method,
+            use_kernel=self.use_kernel,
         )
+        chunks = _plan.pad_and_stack(plan, self.data)
+        return _plan.execute(plan, chunks, self.model.prepare_queries(queries))

@@ -8,6 +8,10 @@ of two valid top-k buffers is a valid top-k buffer of the union (counts are
 per-object totals when objects are *partitioned* across shards, so no
 cross-shard count summation is needed).
 
+These primitives are called only from the unified executor (core/plan.py),
+which picks the strategy per layout: `merge_ragged` for host-streamed
+heterogeneous parts, `merge_topk` for the distributed all-gather.
+
 merge_topk    -- host/XLA merge of stacked per-part results.
 tree_merge    -- log2(S) pairwise merge (the collective-friendly schedule).
 """

@@ -1,12 +1,15 @@
 """Multiple loading (paper section III-D): search datasets larger than device
 memory by streaming index parts and merging per-part top-k results.
 
-On the GPU the parts are copied host->device serially; on TPU the parts are a
-stacked HBM-resident array consumed by lax.scan (double-buffered by XLA), or a
-host python loop when the stack itself exceeds HBM.  The per-part search is
-the dense match + shared `select_topk` pipeline; the merge is core.merge
-(valid because parts partition the object set -- counts never need cross-part
-summation).
+Both entry points are thin adapters over the unified planner (core/plan.py):
+they describe the part layout as a MULTILOAD `QueryPlan` and delegate to the
+shared executor, which owns match dispatch, pad masking, per-part k-clamping,
+selection, and the merge.
+
+On the GPU the parts are copied host->device serially
+(`multiload_search_host`, the literal paper strategy -- `host_loop=True`
+plans); on TPU the parts are a stacked HBM-resident array consumed by
+lax.scan (double-buffered by XLA) via `multiload_search`.
 
 The match function uses the canonical registry signature
 ``match_fn(data, queries) -> counts`` (core/engines.py), so every registered
@@ -15,35 +18,27 @@ passes the ``(lo, hi)`` pair) since they are closed over, not scanned.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import cpq as _cpq
-from repro.core.select import select_topk
+from repro.core import plan as _plan
 from repro.core.types import SearchParams, TopKResult
 
-
-def _mask_invalid(gids: jnp.ndarray, counts: jnp.ndarray, n_objects: Optional[int]):
-    """Drop padding rows: ids at/above the true object count never merge."""
-    valid = gids >= 0
-    if n_objects is not None:
-        valid &= gids < n_objects
-    return jnp.where(valid, gids, -1), jnp.where(valid, counts, -1)
+# Back-compat aliases: the pad-mask implementations now live in the executor
+# module (core/plan.py), the only code that calls them.
+_mask_pad_counts = _plan._mask_pad_counts
+_mask_invalid = _plan._mask_invalid
 
 
-def _mask_pad_counts(counts: jnp.ndarray, offset, n_objects: Optional[int]) -> jnp.ndarray:
-    """Force pad columns (global id >= n_objects) to count -1 *before*
-    selection, so pad rows can never crowd real candidates out of the per-part
-    top-k buffer.  This makes pad safety structural for every engine: the
-    `pad_value` fill only has to be representable, not score-neutral (COSINE's
-    zero rows, for instance, score V/2 against any query)."""
-    if n_objects is None:
-        return counts
-    gcol = offset + jnp.arange(counts.shape[-1], dtype=jnp.int32)
-    return jnp.where((gcol < n_objects)[None, :], counts, -1)
+def _multiload_plan(part_rows, params: SearchParams, match_fn,
+                    n_objects: Optional[int], host_loop: bool) -> _plan.QueryPlan:
+    return _plan.plan_search(
+        match_fn, params.k, params.max_count, layout=_plan.Layout.MULTILOAD,
+        part_rows=part_rows, n_objects=n_objects, method=params.method,
+        candidate_cap=params.candidate_cap, use_kernel=params.use_kernel,
+        host_loop=host_loop,
+    )
 
 
 def multiload_search(
@@ -62,29 +57,9 @@ def multiload_search(
     n_objects: true object count; rows with global id >= n_objects are
                padding from an uneven split and are masked out.
     """
-    c, nc = chunks.shape[0], chunks.shape[1]
-    q = jax.tree_util.tree_leaves(queries)[0].shape[0]
-    k = params.k
-
-    init = (
-        jnp.full((q, k), -1, dtype=jnp.int32),
-        jnp.full((q, k), -1, dtype=jnp.int32),
-    )
-
-    def step(carry, xs):
-        best_ids, best_counts = carry
-        part, chunk_idx = xs
-        counts = _mask_pad_counts(match_fn(part, queries), chunk_idx * nc, n_objects)
-        local = select_topk(counts, params)
-        global_ids = jnp.where(local.ids >= 0, local.ids + chunk_idx * nc, -1)
-        gids, gcnt = _mask_invalid(global_ids, local.counts, n_objects)
-        ids = jnp.concatenate([best_ids, gids[:, :k]], axis=-1)
-        cnt = jnp.concatenate([best_counts, gcnt[:, :k]], axis=-1)
-        new_ids, new_counts = _cpq.topk_from_candidates(ids, cnt, k)
-        return (new_ids, new_counts), None
-
-    (ids, counts), _ = jax.lax.scan(step, init, (chunks, jnp.arange(c, dtype=jnp.int32)))
-    return TopKResult(ids=ids, counts=counts, threshold=counts[:, -1])
+    part_rows = (int(chunks.shape[1]),) * int(chunks.shape[0])
+    plan = _multiload_plan(part_rows, params, match_fn, n_objects, host_loop=False)
+    return _plan.execute(plan, chunks, queries)
 
 
 def multiload_search_host(parts, queries, params, match_fn,
@@ -97,20 +72,6 @@ def multiload_search_host(parts, queries, params, match_fn,
     segments through here); a part smaller than k contributes only
     min(k, n_part) candidates.
     """
-    q = jax.tree_util.tree_leaves(queries)[0].shape[0]
-    k = params.k
-    best_ids = jnp.full((q, k), -1, dtype=jnp.int32)
-    best_counts = jnp.full((q, k), -1, dtype=jnp.int32)
-    offset = 0
-    for part in parts:
-        part = jax.device_put(part)
-        counts = _mask_pad_counts(match_fn(part, queries), offset, n_objects)
-        local = select_topk(counts,
-                            dataclasses.replace(params, k=min(k, int(part.shape[0]))))
-        gids = jnp.where(local.ids >= 0, local.ids + offset, -1)
-        gids, gcnt = _mask_invalid(gids, local.counts, n_objects)
-        ids = jnp.concatenate([best_ids, gids[:, :k]], axis=-1)
-        cnt = jnp.concatenate([best_counts, gcnt[:, :k]], axis=-1)
-        best_ids, best_counts = _cpq.topk_from_candidates(ids, cnt, k)
-        offset += int(part.shape[0])
-    return TopKResult(ids=best_ids, counts=best_counts, threshold=best_counts[:, -1])
+    part_rows = tuple(int(p.shape[0]) for p in parts)
+    plan = _multiload_plan(part_rows, params, match_fn, n_objects, host_loop=True)
+    return _plan.execute(plan, list(parts), queries)

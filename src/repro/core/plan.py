@@ -1,0 +1,551 @@
+"""Unified query planning + execution: one plan -> execute pipeline for every
+GENIE search path.
+
+The execution layer had quietly forked into four near-copies of the same
+loop -- `GenieIndex.search`, `SegmentedIndex.search`/`search_multiload`,
+`multiload_search(_host)`, and the distributed shard_map step each re-derived
+engine dispatch, pad masking, per-part k-clamping, and top-k merging.  This
+module is the consolidation (the Faiss plan/execute split of Johnson et al.
+1702.08734, FLASH's host-orchestrated part streaming for memory-bound
+corpora):
+
+  * `plan_search(...)` is the single entry point that describes a search as a
+    `QueryPlan`: the engine, the part layout (monolithic / segments /
+    multiload parts / mesh shards), the pad policy, the per-part k clamp, and
+    the merge strategy.
+  * `execute(plan, data, queries)` is the ONLY code in the system that calls
+    match kernels, pad masking, `select_topk`, and the `core/merge` buffers.
+    Every legacy entry point is now a thin adapter that builds a plan and
+    delegates here.
+  * Compiled executables are cached per plan (`_EXEC_CACHE`): repeated
+    queries with the same (engine, layout shape, k, method, use_kernel)
+    reuse the jitted program instead of re-tracing.  `trace_count(plan)`
+    exposes the per-plan trace counter so tests (and the serve-latency
+    benchmark) can assert cache hits.
+
+The four layouts and their merge strategies:
+
+  MONOLITHIC   one device-resident part; selection IS the merge.
+  SEGMENTED    host loop over immutable per-segment parts (heterogeneous
+               rows); per-part buffers of width min(k, rows) merged exactly
+               by `merge_ragged` (parts partition the object set).
+  MULTILOAD    paper section III-D part streaming: either a stacked
+               [C, Nc, ...] lax.scan with an incremental pairwise merge
+               (device-resident stack) or the literal host loop
+               (`host_loop=True`, parts swapped through the device).
+  DISTRIBUTED  mesh shards under shard_map; per-shard buffers all-gathered
+               and merged collectively (optionally hierarchically: pod-local
+               first, then across pods).
+
+Invariants owned here (and deleted from the four former copies):
+pad-never-in-topk (counts of rows with global id >= n_objects are forced to
+-1 *before* selection), the (count desc, id asc) tie-break (stable buffer
+merges over id-ascending parts), and the ragged per-part k clamp.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import cpq as _cpq
+from repro.core import engines as _engines
+from repro.core import merge as _merge
+from repro.core.select import select_topk
+from repro.core.types import Engine, SearchParams, TopKMethod, TopKResult
+
+# jax >= 0.6 promotes shard_map to the top level (keyword `check_vma`);
+# earlier releases keep it in jax.experimental (keyword `check_rep`).
+try:
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+
+    _CHECK_KW = "check_vma"
+except ImportError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+MatchLike = Union[Engine, str, "_engines.MatchModel",
+                  Callable[[jnp.ndarray, Any], jnp.ndarray]]
+
+
+class Layout(str, enum.Enum):
+    """Part layout of a planned search (the taxonomy in docs/EXECUTION.md)."""
+
+    MONOLITHIC = "monolithic"      # one device-resident data matrix
+    SEGMENTED = "segmented"        # host loop over sealed per-batch segments
+    MULTILOAD = "multiload"        # streamed index parts (scan or host loop)
+    DISTRIBUTED = "distributed"    # object shards across a device mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """A fully-resolved description of one search: who matches, over which
+    parts, how pads are masked, how much each part contributes to the merge.
+
+    Hashable by construction -- the plan IS the executable-cache key.
+    """
+
+    match: Callable[[jnp.ndarray, Any], jnp.ndarray]  # canonical match fn
+    params: SearchParams
+    layout: Layout
+    part_rows: tuple[int, ...] = ()    # physical rows per part ((): deferred)
+    n_objects: Optional[int] = None    # real corpus rows; None = nothing padded
+    engine: Optional[Engine] = None    # None when `match` is a raw callable
+    pad_value: Any = None              # engine fill for padded rows
+    fused_hist: bool = False           # single-device fused Pallas histogram
+    host_loop: bool = False            # MULTILOAD: host streaming vs lax.scan
+    hierarchical: bool = False         # DISTRIBUTED: pod-local merge first
+    mesh_axes: tuple[str, ...] = ()    # DISTRIBUTED: mesh axis names
+
+    # -- derived layout facts ----------------------------------------------
+    @property
+    def n_parts(self) -> int:
+        return len(self.part_rows)
+
+    @property
+    def total_rows(self) -> int:
+        return sum(self.part_rows)
+
+    @property
+    def pad_rows(self) -> int:
+        if self.n_objects is None or not self.part_rows:
+            return 0
+        return self.total_rows - self.n_objects
+
+    def part_k(self, rows: int) -> int:
+        """Ragged k clamp: a part smaller than k contributes only
+        min(k, rows) candidates (host-loop layouts)."""
+        return min(self.params.k, rows)
+
+    def merge_strategy(self) -> str:
+        if self.layout == Layout.MONOLITHIC:
+            return "none"
+        if self.layout == Layout.DISTRIBUTED:
+            return "collective-hierarchical" if self.hierarchical else "collective"
+        if self.layout == Layout.MULTILOAD and not self.host_loop:
+            return "incremental-pairwise"
+        return "ragged-buffer"
+
+    def describe(self) -> dict:
+        """Host-side plan summary (surfaced by launch/dryrun cost reports)."""
+        rows = list(self.part_rows)
+        return dict(
+            layout=self.layout.value,
+            engine=self.engine.value if self.engine else "<callable>",
+            k=self.params.k,
+            method=self.params.method.value,
+            use_kernel=self.params.use_kernel,
+            n_parts=self.n_parts,
+            part_rows=rows if len(rows) <= 32 else rows[:32] + ["..."],
+            part_k=[self.part_k(r) for r in rows[:32]],
+            n_objects=self.n_objects,
+            pad_rows=self.pad_rows,
+            merge=self.merge_strategy(),
+            host_loop=self.host_loop,
+            hierarchical=self.hierarchical,
+            mesh_axes=list(self.mesh_axes),
+            fused_hist=self.fused_hist,
+        )
+
+
+def plan_search(
+    engine: MatchLike,
+    k: int,
+    max_count: int,
+    *,
+    layout: Layout = Layout.MONOLITHIC,
+    part_rows: Optional[Sequence[int]] = None,
+    n_parts: Optional[int] = None,
+    n_objects: Optional[int] = None,
+    method: TopKMethod = TopKMethod.CPQ,
+    candidate_cap: Optional[int] = None,
+    use_kernel: bool = True,
+    host_loop: bool = False,
+    hierarchical: bool = False,
+    mesh_axes: Sequence[str] = (),
+) -> QueryPlan:
+    """The single planning entry point: resolve the engine, lay out the
+    parts, fix the pad policy and merge strategy, return the QueryPlan.
+
+    `engine` may be an Engine, its string value, a MatchModel, or a raw
+    canonical callable ``fn(data, queries) -> counts`` (back-compat with code
+    that hands bare match functions to multiload/distributed search).
+
+    Layout shape: pass `part_rows` (explicit, possibly ragged part sizes) or
+    `n_parts` with `n_objects` (an even split padded up to divisibility --
+    the classic multiload partition).  DISTRIBUTED plans defer the shape to
+    compile time (shard_map splits whatever data arrives).
+    """
+    model: Optional[_engines.MatchModel] = None
+    if callable(engine) and not isinstance(engine, (_engines.MatchModel, Engine, str)):
+        match = engine
+    else:
+        model = _engines.get(engine)
+        match = model.match_fn(use_kernel)
+
+    layout = Layout(layout)
+    if part_rows is None and n_parts is not None:
+        if n_parts < 1:
+            raise ValueError(f"n_parts must be >= 1, got {n_parts}")
+        if n_objects is None:
+            raise ValueError("an even multiload split needs n_objects")
+        per = -(-n_objects // n_parts)
+        part_rows = (per,) * n_parts
+    rows = tuple(int(r) for r in part_rows) if part_rows is not None else ()
+    if layout in (Layout.SEGMENTED, Layout.MULTILOAD) and not rows:
+        raise ValueError(f"{layout.value} layout requires part_rows (or n_parts)")
+    if layout == Layout.MONOLITHIC and len(rows) > 1:
+        raise ValueError(f"monolithic layout got {len(rows)} parts")
+    if any(r < 1 for r in rows):
+        raise ValueError(f"part_rows must be positive, got {rows}")
+    if layout == Layout.MULTILOAD and not host_loop and len(set(rows)) > 1:
+        # the scanned executor derives global-id offsets as i * part_rows[0];
+        # ragged parts would silently globalise wrong ids
+        raise ValueError(
+            f"scanned multiload layout requires uniform part_rows, got {rows}; "
+            f"pass host_loop=True to stream ragged parts"
+        )
+
+    params = SearchParams(k=k, max_count=max_count, method=method,
+                          candidate_cap=candidate_cap, use_kernel=use_kernel)
+    # The fused Pallas histogram runs on the single-device paths only; the
+    # scan / shard_map paths keep the jnp reference histogram (unchanged
+    # behaviour of the four pre-planner copies).
+    fused = use_kernel and layout in (Layout.MONOLITHIC, Layout.SEGMENTED)
+    return QueryPlan(
+        match=match, params=params, layout=layout, part_rows=rows,
+        n_objects=n_objects, engine=model.engine if model else None,
+        pad_value=model.pad_value if model else None, fused_hist=fused,
+        host_loop=bool(host_loop) and layout == Layout.MULTILOAD,
+        hierarchical=bool(hierarchical), mesh_axes=tuple(mesh_axes),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pad policy (the only pad masking / pad filling in the system)
+# ---------------------------------------------------------------------------
+
+def _mask_pad_counts(counts: jnp.ndarray, offset, n_objects: Optional[int]) -> jnp.ndarray:
+    """Force pad columns (global id >= n_objects) to count -1 *before*
+    selection, so pad rows can never crowd real candidates out of a candidate
+    buffer.  This makes pad safety structural for every engine: the
+    `pad_value` fill only has to be representable, not score-neutral
+    (COSINE's zero rows, for instance, score V/2 against any query)."""
+    if n_objects is None:
+        return counts
+    gcol = offset + jnp.arange(counts.shape[-1], dtype=jnp.int32)
+    return jnp.where((gcol < n_objects)[None, :], counts, -1)
+
+
+def _mask_invalid(gids: jnp.ndarray, counts: jnp.ndarray, n_objects: Optional[int]):
+    """Drop padding rows post-selection: ids at/above the true object count
+    never merge (belt to `_mask_pad_counts`'s braces)."""
+    valid = gids >= 0
+    if n_objects is not None:
+        valid &= gids < n_objects
+    return jnp.where(valid, gids, -1), jnp.where(valid, counts, -1)
+
+
+def pad_to_multiple(data: jnp.ndarray, multiple: int, pad_value) -> tuple[jnp.ndarray, int]:
+    """(padded data, true row count): append engine-fill rows up to the next
+    multiple (mesh divisibility, even part splits)."""
+    n = int(data.shape[0])
+    pad = (-n) % max(int(multiple), 1)
+    if pad:
+        fill = jnp.full((pad,) + data.shape[1:], pad_value, dtype=data.dtype)
+        data = jnp.concatenate([data, fill], axis=0)
+    return data, n
+
+
+def pad_and_stack(plan: QueryPlan, data: jnp.ndarray) -> jnp.ndarray:
+    """Materialise a MULTILOAD scan layout from a monolithic data matrix:
+    pad with the plan's engine fill and stack into [C, Nc, ...] chunks."""
+    if plan.layout != Layout.MULTILOAD or not plan.part_rows:
+        raise ValueError(f"pad_and_stack needs a MULTILOAD plan, got {plan.layout}")
+    if plan.pad_value is None:
+        raise ValueError("pad_and_stack needs an engine-resolved plan "
+                         "(raw-callable plans carry no pad fill)")
+    per = plan.part_rows[0]
+    want = per * plan.n_parts
+    n = int(data.shape[0])
+    if n > want:
+        raise ValueError(f"data has {n} rows but the plan lays out {want}")
+    if n < want:
+        fill = jnp.full((want - n,) + data.shape[1:], plan.pad_value,
+                        dtype=data.dtype)
+        data = jnp.concatenate([data, fill], axis=0)
+    return data.reshape(plan.n_parts, per, *data.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# The executable cache + per-plan trace counter
+# ---------------------------------------------------------------------------
+
+_EXEC_CACHE: dict = {}
+_TRACE_COUNTS: dict = {}
+# FIFO bound on retained executables: jitted wrappers pin their compiled
+# programs, so a long-lived serving process interleaving adds and searches
+# must not accumulate stale entries forever.
+PLAN_CACHE_CAP = 256
+
+
+def _note_trace(key) -> None:
+    # runs at trace time only (python body of a jitted function): counts how
+    # often an executable was actually re-traced vs served from cache
+    _TRACE_COUNTS[key] = _TRACE_COUNTS.get(key, 0) + 1
+
+
+def _is_host_loop(plan: QueryPlan) -> bool:
+    return plan.layout == Layout.SEGMENTED or (
+        plan.layout == Layout.MULTILOAD and plan.host_loop)
+
+
+def trace_count(plan: QueryPlan) -> int:
+    """How many times this plan's executables have been traced (a cache hit
+    leaves the counter unchanged).  Host-loop plans sum their per-part
+    kernels (parts with equal row counts share one); distributed plans sum
+    across meshes."""
+    if _is_host_loop(plan):
+        return sum(_TRACE_COUNTS.get(k, 0)
+                   for k in {_part_key(plan, r) for r in plan.part_rows})
+    if plan.layout == Layout.DISTRIBUTED:
+        return sum(v for k, v in _TRACE_COUNTS.items()
+                   if k[0] == "dist" and k[1] == plan)
+    tag = "mono" if plan.layout == Layout.MONOLITHIC else "scan"
+    return _TRACE_COUNTS.get((tag, plan), 0)
+
+
+def plan_cache_size() -> int:
+    return len(_EXEC_CACHE)
+
+
+def clear_plan_cache() -> None:
+    _EXEC_CACHE.clear()
+    _TRACE_COUNTS.clear()
+
+
+def _cached(key, builder):
+    fn = _EXEC_CACHE.get(key)
+    if fn is None:
+        while len(_EXEC_CACHE) >= PLAN_CACHE_CAP:
+            evicted = next(iter(_EXEC_CACHE))             # FIFO eviction
+            _EXEC_CACHE.pop(evicted)
+            _TRACE_COUNTS.pop(evicted, None)  # drop the counter twin too, or
+            # the leak guard merely relocates the leak into the trace dict
+        fn = _EXEC_CACHE[key] = builder()
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Executors: the ONLY callers of match kernels, pad masks, select, and merge
+# ---------------------------------------------------------------------------
+
+def _part_topk(plan: QueryPlan, data: jnp.ndarray, queries: Any, offset,
+               k: Optional[int] = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One part's candidate buffer: match -> pad mask -> select -> globalise.
+
+    The shared core of every layout.  Returns (global ids, counts), both
+    [Q, k], empty slots -1."""
+    params = plan.params if k is None or k == plan.params.k \
+        else dataclasses.replace(plan.params, k=k)
+    counts = _mask_pad_counts(plan.match(data, queries), offset, plan.n_objects)
+    local = select_topk(counts, params, use_fused_hist=plan.fused_hist)
+    gids = jnp.where(local.ids >= 0, local.ids + offset, -1)
+    return _mask_invalid(gids, local.counts, plan.n_objects)
+
+
+def _build_monolithic(plan: QueryPlan, key):
+    def run(data: jnp.ndarray, queries: Any) -> TopKResult:
+        _note_trace(key)
+        counts = _mask_pad_counts(plan.match(data, queries), 0, plan.n_objects)
+        # selection is the merge: return select_topk's result (threshold
+        # included) exactly as the pre-planner single-device search did
+        return select_topk(counts, plan.params, use_fused_hist=plan.fused_hist)
+
+    return jax.jit(run)
+
+
+def _build_scan(plan: QueryPlan, key):
+    nc = plan.part_rows[0]
+    k = plan.params.k
+
+    def run(chunks: jnp.ndarray, queries: Any) -> TopKResult:
+        _note_trace(key)
+        q = jax.tree_util.tree_leaves(queries)[0].shape[0]
+        init = (jnp.full((q, k), -1, dtype=jnp.int32),
+                jnp.full((q, k), -1, dtype=jnp.int32))
+
+        def step(carry, xs):
+            best_ids, best_counts = carry
+            part, chunk_idx = xs
+            gids, gcnt = _part_topk(plan, part, queries, chunk_idx * nc)
+            ids = jnp.concatenate([best_ids, gids[:, :k]], axis=-1)
+            cnt = jnp.concatenate([best_counts, gcnt[:, :k]], axis=-1)
+            return _cpq.topk_from_candidates(ids, cnt, k), None
+
+        xs = (chunks, jnp.arange(plan.n_parts, dtype=jnp.int32))
+        (ids, counts), _ = jax.lax.scan(step, init, xs)
+        return TopKResult(ids=ids, counts=counts, threshold=counts[:, -1])
+
+    return jax.jit(run)
+
+
+def _part_key(plan: QueryPlan, rows: int) -> tuple:
+    """Cache key of a host-loop per-part kernel: only what the part program
+    actually closes over -- NOT the whole plan, so growing the corpus (new
+    part_rows / n_objects) keeps reusing kernels compiled for the same part
+    shape (the id offset and pad boundary are traced scalars)."""
+    params = dataclasses.replace(plan.params, k=plan.part_k(rows))
+    return ("part", plan.match, params, plan.fused_hist,
+            plan.n_objects is not None, rows)
+
+
+def _part_fn(plan: QueryPlan, rows: int):
+    """Cached per-part jitted kernel for the host-loop layouts: parts with
+    the same row count share one compiled program across searches AND across
+    corpus growth, so a 40-segment corpus of equal seals compiles once."""
+    key = _part_key(plan, rows)
+    match, fused = plan.match, plan.fused_hist
+    params = dataclasses.replace(plan.params, k=plan.part_k(rows))
+    masked = plan.n_objects is not None
+
+    def build():
+        def run(part, queries, offset, n_limit):
+            _note_trace(key)
+            counts = match(part, queries)
+            if masked:
+                counts = _mask_pad_counts(counts, offset, n_limit)
+            local = select_topk(counts, params, use_fused_hist=fused)
+            gids = jnp.where(local.ids >= 0, local.ids + offset, -1)
+            if masked:
+                return _mask_invalid(gids, local.counts, n_limit)
+            return gids, local.counts
+
+        return jax.jit(run)
+
+    return _cached(key, build)
+
+
+def _run_host_parts(plan: QueryPlan, parts, queries) -> TopKResult:
+    """Host-orchestrated part streaming (SEGMENTED and MULTILOAD host_loop):
+    each part is swapped through the device, selected into a buffer of width
+    min(k, rows), and the ragged buffers merge exactly (parts partition the
+    object set and arrive in ascending global-id order)."""
+    if len(parts) != plan.n_parts:
+        raise ValueError(f"plan lays out {plan.n_parts} parts, got {len(parts)}")
+    n_limit = jnp.int32(plan.n_objects if plan.n_objects is not None else 0)
+    buf_ids, buf_counts = [], []
+    offset = 0
+    for part, rows in zip(parts, plan.part_rows):
+        if int(part.shape[0]) != rows:
+            raise ValueError(f"part has {int(part.shape[0])} rows, plan says {rows}")
+        part = jax.device_put(part)
+        gids, gcnt = _part_fn(plan, rows)(part, queries, jnp.int32(offset),
+                                          n_limit)
+        buf_ids.append(gids)
+        buf_counts.append(gcnt)
+        offset += rows
+    return _merge.merge_ragged(buf_ids, buf_counts, plan.params.k)
+
+
+def _mesh_key(mesh: jax.sharding.Mesh) -> tuple:
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(int(d.id) for d in mesh.devices.flat))
+
+
+def _build_sharded(plan: QueryPlan, mesh: jax.sharding.Mesh, key):
+    """The distributed executor: every shard runs the shared part kernel on
+    its local object partition, then the cap-sized candidate buffers merge
+    collectively (all-gather + small-buffer select; hierarchical plans merge
+    pod-locally over cheap ICI first, then across pods over DCN)."""
+    axes = tuple(mesh.axis_names)
+    hier = plan.hierarchical and axes[0] == "pod"
+    inner_axes = axes[1:] if hier else axes
+
+    def _local(data_local: jnp.ndarray, queries: Any) -> TopKResult:
+        _note_trace(key)
+        n_local = data_local.shape[0]
+        shard = _shard_linear_index(axes)
+        gids, gcnt = _part_topk(plan, data_local, queries, shard * n_local)
+        if not hier:
+            all_ids = jax.lax.all_gather(gids, axis_name=axes, axis=0, tiled=False)
+            all_cnt = jax.lax.all_gather(gcnt, axis_name=axes, axis=0, tiled=False)
+            return _merge.merge_topk(all_ids, all_cnt, plan.params.k)
+        # level 1: merge within the pod (over data/model axes)
+        ids_in = jax.lax.all_gather(gids, axis_name=inner_axes, axis=0, tiled=False)
+        cnt_in = jax.lax.all_gather(gcnt, axis_name=inner_axes, axis=0, tiled=False)
+        pod = _merge.merge_topk(ids_in, cnt_in, plan.params.k)
+        # level 2: merge across pods
+        ids_out = jax.lax.all_gather(pod.ids, axis_name=("pod",), axis=0, tiled=False)
+        cnt_out = jax.lax.all_gather(pod.counts, axis_name=("pod",), axis=0, tiled=False)
+        return _merge.merge_topk(ids_out, cnt_out, plan.params.k)
+
+    sharded = shard_map_compat(
+        _local, mesh,
+        in_specs=(P(axes), P(None, None)),
+        out_specs=TopKResult(ids=P(None, None), counts=P(None, None),
+                             threshold=P(None)),
+    )
+    return jax.jit(sharded)
+
+
+def executable(plan: QueryPlan, mesh: Optional[jax.sharding.Mesh] = None):
+    """The compiled-callable for a plan, from the cache when the same
+    (engine, layout shape, k, method, use_kernel) was planned before.
+
+    Returns ``fn(data, queries) -> TopKResult`` where `data`'s form follows
+    the layout: one array (MONOLITHIC / DISTRIBUTED-sharded), a stacked
+    [C, Nc, ...] array (MULTILOAD scan), or a list of per-part arrays
+    (SEGMENTED / MULTILOAD host loop)."""
+    if plan.layout == Layout.DISTRIBUTED:
+        if mesh is None:
+            raise ValueError("a DISTRIBUTED plan executes on a mesh; pass mesh=")
+        key = ("dist", plan, _mesh_key(mesh))
+        return _cached(key, lambda: _build_sharded(plan, mesh, key))
+    if plan.layout == Layout.MONOLITHIC:
+        key = ("mono", plan)
+        return _cached(key, lambda: _build_monolithic(plan, key))
+    if plan.layout == Layout.MULTILOAD and not plan.host_loop:
+        key = ("scan", plan)
+        return _cached(key, lambda: _build_scan(plan, key))
+    # host-loop layouts: the python orchestration is free to rebuild; the
+    # per-part compiled kernels underneath are the cached hot path
+    return lambda parts, queries: _run_host_parts(plan, parts, queries)
+
+
+def execute(plan: QueryPlan, data, queries,
+            mesh: Optional[jax.sharding.Mesh] = None) -> TopKResult:
+    """Run a planned search.  The only public door to the match/select/merge
+    machinery -- every index/serving entry point delegates here."""
+    return executable(plan, mesh=mesh)(data, queries)
+
+
+# ---------------------------------------------------------------------------
+# Mesh helpers shared with core/distributed (which re-exports them)
+# ---------------------------------------------------------------------------
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """Version-portable shard_map with replication checking disabled."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: False})
+
+
+def _axis_size(name: str) -> jnp.ndarray:
+    # jax.lax.axis_size is newer-jax; psum(1) is its portable equivalent
+    # (constant-folded at trace time).
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def _shard_linear_index(axes: tuple[str, ...]) -> jnp.ndarray:
+    """Linearised shard index over the given mesh axes (row-major)."""
+    idx = jnp.int32(0)
+    for name in axes:
+        idx = idx * _axis_size(name) + jax.lax.axis_index(name)
+    return idx

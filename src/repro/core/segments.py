@@ -5,8 +5,9 @@ call, so filling a corpus of N items in B batches cost O(N^2/B) device work
 and re-uploaded all signatures each time.  This module fixes that bug the way
 FAISS shards billion-scale GPU indexes (Johnson et al. 1702.08734): each
 `add()` seals the batch into an immutable per-segment `GenieIndex` (O(batch)
-device work), `search()` runs the dense match + shared `select_topk` per
-segment and merges the cap-sized candidate buffers with core/merge, and
+device work), `search()` builds a SEGMENTED QueryPlan over the sealed parts
+and delegates to the unified executor (core/plan.py) which matches, selects,
+and merges the cap-sized candidate buffers exactly, and
 `compact(max_segments)` coalesces adjacent segments so steady-state search
 cost stays flat as the corpus grows.
 
@@ -39,11 +40,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engines as _engines
-from repro.core import merge as _merge
-from repro.core import multiload as _multiload
+from repro.core import plan as _plan
 from repro.core.index import GenieIndex
-from repro.core.select import select_topk
-from repro.core.types import Engine, IndexStats, SearchParams, TopKMethod, TopKResult
+from repro.core.types import Engine, IndexStats, TopKMethod, TopKResult
 
 
 def even_segments(n_objects: int, n_segments: int) -> list[int]:
@@ -151,22 +150,13 @@ class SegmentedIndex:
                candidate_cap: int | None = None) -> TopKResult:
         if not self.segments:
             raise ValueError("empty SegmentedIndex: add() first")
-        model = self.model
-        q = model.prepare_queries(queries)
-        match = model.match_fn(self.use_kernel)
-        buf_ids, buf_counts = [], []
-        offset = 0
-        for seg in self.segments:
-            n_seg = seg.stats.n_objects
-            params = SearchParams(k=min(k, n_seg), max_count=self.max_count,
-                                  method=method, candidate_cap=candidate_cap,
-                                  use_kernel=self.use_kernel)
-            local = select_topk(match(seg.data, q), params,
-                                use_fused_hist=self.use_kernel)
-            buf_ids.append(jnp.where(local.ids >= 0, local.ids + offset, -1))
-            buf_counts.append(local.counts)
-            offset += n_seg
-        return _merge.merge_ragged(buf_ids, buf_counts, k)
+        plan = _plan.plan_search(
+            self.engine, k, self.max_count, layout=_plan.Layout.SEGMENTED,
+            part_rows=tuple(self.segment_rows), method=method,
+            candidate_cap=candidate_cap, use_kernel=self.use_kernel,
+        )
+        return _plan.execute(plan, [s.data for s in self.segments],
+                             self.model.prepare_queries(queries))
 
     def search_multiload(self, queries, k: int,
                          method: TopKMethod = TopKMethod.CPQ) -> TopKResult:
@@ -175,13 +165,13 @@ class SegmentedIndex:
         parts, so nothing is re-concatenated or re-padded."""
         if not self.segments:
             raise ValueError("empty SegmentedIndex: add() first")
-        model = self.model
-        params = SearchParams(k=k, max_count=self.max_count, method=method,
-                              use_kernel=self.use_kernel)
-        return _multiload.multiload_search_host(
-            [s.data for s in self.segments], model.prepare_queries(queries),
-            params, model.match_fn(self.use_kernel), n_objects=self.n_objects,
+        plan = _plan.plan_search(
+            self.engine, k, self.max_count, layout=_plan.Layout.MULTILOAD,
+            part_rows=tuple(self.segment_rows), n_objects=self.n_objects,
+            method=method, use_kernel=self.use_kernel, host_loop=True,
         )
+        return _plan.execute(plan, [s.data for s in self.segments],
+                             self.model.prepare_queries(queries))
 
     # ------------------------------------------------------------------
     # Compaction
@@ -228,10 +218,4 @@ class SegmentedIndex:
         if not self.segments:
             raise ValueError("empty SegmentedIndex: add() first")
         data = jnp.concatenate([s.data for s in self.segments], axis=0)
-        n = int(data.shape[0])
-        pad = (-n) % max(pad_multiple, 1)
-        if pad:
-            fill = jnp.full((pad,) + data.shape[1:], self.model.pad_value,
-                            dtype=data.dtype)
-            data = jnp.concatenate([data, fill], axis=0)
-        return data, n
+        return _plan.pad_to_multiple(data, pad_multiple, self.model.pad_value)

@@ -1,15 +1,15 @@
 """Unified top-k selection: one pipeline for every search path.
 
-Single-device `GenieIndex.search`, streamed `multiload_search`, and the
-sharded `distributed` step all select candidates the same way -- this module
-is that shared step.  `select_topk` dispatches on `SearchParams.method`
-(c-PQ gate / SPQ bucket narrowing / full sort) and optionally consumes the
-fused Pallas histogram (kernels/cpq_hist) so the Gate reconstruction never
-re-reads the counts matrix on the kernel path.
+`select_topk` dispatches on `SearchParams.method` (c-PQ gate / SPQ bucket
+narrowing / full sort) and optionally consumes the fused Pallas histogram
+(kernels/cpq_hist) so the Gate reconstruction never re-reads the counts
+matrix on the kernel path.
 
-Keeping selection behind one function is what makes the selection strategy a
-*parameter* of a search rather than a property of the call site: multiload and
-distributed searches honour `method` exactly like single-device search does.
+Its only caller is the unified executor (core/plan.py) -- monolithic,
+segmented, multiload, and distributed layouts all select through the same
+per-part step there, which is what makes the selection strategy a
+*parameter* of a search rather than a property of the call site: every
+layout honours `method` exactly like single-device search does.
 """
 from __future__ import annotations
 

@@ -281,7 +281,7 @@ def run_lm_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
 
 def run_genie_cell(dataset: str, mesh_kind: str) -> dict:
     from repro.configs.genie_datasets import DATASETS
-    from repro.core import distributed as dist
+    from repro.core import plan as plan_lib
     from repro.core.types import SearchParams
 
     ds = DATASETS[dataset]
@@ -325,16 +325,21 @@ def run_genie_cell(dataset: str, mesh_kind: str) -> dict:
         # segmented shard layout: data is segments concatenated in global-id
         # order and padded up to mesh divisibility (SegmentedIndex.concat_data);
         # n_objects masks the ragged pad tail out of every shard's buffer.
-        step = (
-            dist.make_hierarchical_search_step(mesh, params, ds.engine,
-                                               n_objects=ds.n_objects)
-            if mesh_kind == "multi"
-            else dist.make_search_step(mesh, params, ds.engine,
-                                       n_objects=ds.n_objects)
+        # The plan is built once and both costed (describe) and lowered
+        # (executable) -- the dry-run prices exactly the program that serves.
+        plan = plan_lib.plan_search(
+            ds.engine, params.k, params.max_count,
+            layout=plan_lib.Layout.DISTRIBUTED, n_objects=ds.n_objects,
+            use_kernel=params.use_kernel,
+            hierarchical=(mesh_kind == "multi"
+                          and tuple(mesh.axis_names)[0] == "pod"),
+            mesh_axes=tuple(mesh.axis_names),
         )
+        step = plan_lib.executable(plan, mesh=mesh)
         lowered = step.lower(data_sds, query_sds)
         compiled = lowered.compile()
     rep = _report(lowered, compiled, time.time() - t0)
+    rep["plan"] = plan.describe()
     # Pallas kernel cost model (per device): the deployable TPU path streams
     # the signature matrix once per query batch with VMEM-resident count
     # tiles; the XLA fallback engine recorded above re-reads its [Q, N]

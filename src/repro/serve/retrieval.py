@@ -22,6 +22,14 @@ exceeds `max_segments` the index compacts adjacent segments down to
 `max_segments // 2`, so steady-state search cost stays flat while adds stay
 cheap.  Search merges per-segment candidate buffers exactly (segments
 partition the object set), so results are identical to a monolithic rebuild.
+
+Sharded serving: pass `mesh=` (a jax device mesh) and `search` plans the
+segmented corpus across the mesh via the DISTRIBUTED layout -- segments are
+concatenated in global-id order, padded up to mesh divisibility, sharded
+over every mesh axis, and served through the same unified executor
+(core/plan.py) as single-device search, so results are identical.  The
+sharded placement is cached between searches and refreshed only when the
+corpus changes (an `add` or a compaction).
 """
 from __future__ import annotations
 
@@ -32,8 +40,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SegmentedIndex, TopKMethod
+from repro.core import SegmentedIndex, TopKMethod, distributed
+from repro.core import engines as engines_lib
 from repro.core import lsh as lsh_lib
+from repro.core import plan as plan_lib
 from repro.core.lsh import tau_ann
 
 
@@ -49,6 +59,7 @@ class RetrievalService:
     seed: int = 0
     m_override: Optional[int] = None
     max_segments: int = 16                         # compaction trigger for add()
+    mesh: Optional[jax.sharding.Mesh] = None       # serve sharded when set
 
     def __post_init__(self):
         self.m = self.m_override or tau_ann.required_m(self.eps, self.delta)
@@ -59,6 +70,8 @@ class RetrievalService:
         self._dim: Optional[int] = None
         self._index: Optional[SegmentedIndex] = None
         self._items: list = []
+        # sharded-serving placement cache: (corpus fingerprint, data, n)
+        self._placed: Optional[tuple] = None
 
     def _make_params(self, d: int):
         key = jax.random.PRNGKey(self.seed)
@@ -111,22 +124,69 @@ class RetrievalService:
     def index_stats(self):
         """Aggregate IndexStats with per-segment build/compaction accounting."""
         if self._index is None:
-            raise ValueError("add() first")
+            raise ValueError(
+                "RetrievalService index is empty (no items added yet): "
+                "call add() before reading index_stats"
+            )
         return self._index.stats
+
+    def _corpus_fingerprint(self) -> tuple:
+        idx = self._index
+        return (len(idx.segments), idx.n_objects, idx.compaction_count)
+
+    def _sharded_corpus(self) -> tuple:
+        """(sharded data, n_objects), cached until the corpus changes."""
+        fp = self._corpus_fingerprint()
+        if self._placed is None or self._placed[0] != fp:
+            data, n = self._index.concat_data(pad_multiple=self.mesh.size)
+            data = jax.device_put(data, distributed.data_sharding(self.mesh))
+            self._placed = (fp, data, n)
+        return self._placed[1], self._placed[2]
 
     def search(self, queries, k: int = 10, *, embeddings: Optional[np.ndarray] = None,
                method: TopKMethod = TopKMethod.CPQ):
         if self._index is None:
             # a real exception, not an assert: asserts vanish under python -O
-            raise ValueError("add() first")
+            raise ValueError(
+                "RetrievalService index is empty (no items added yet): "
+                "call add() before search()"
+            )
         emb = self._embed(queries, embeddings,
                           expect_rows=None if queries is None else len(queries))
         qsigs = self._hash(emb)
-        res = self._index.search(qsigs, k=k, method=method)
+        if self.mesh is None:
+            res = self._index.search(qsigs, k=k, method=method)
+        else:
+            # sharded serving: the segmented corpus planned across the mesh
+            # via the DISTRIBUTED layout, served by the same executor --
+            # results are identical to the single-device segment merge
+            data, n = self._sharded_corpus()
+            plan = plan_lib.plan_search(
+                self._scheme.engine, k, self._index.max_count,
+                layout=plan_lib.Layout.DISTRIBUTED, n_objects=n, method=method,
+                use_kernel=self._index.use_kernel,
+                mesh_axes=tuple(self.mesh.axis_names),
+            )
+            canonical = engines_lib.get(self._scheme.engine).prepare_queries(qsigs)
+            qq = jax.device_put(canonical, distributed.replicated(self.mesh, 2))
+            res = plan_lib.execute(plan, data, qq, mesh=self.mesh)
         # scheme-paired MLE: c/m for bucketed families (Eqn 7), the simhash
         # angle inversion for COSINE
         sims = self._scheme.mle(np.asarray(res.counts), self.m)
         return res, sims
 
     def items_for(self, result_ids: np.ndarray) -> list:
-        return [[self._items[int(i)] if i >= 0 else None for i in row] for row in result_ids]
+        """Resolve result ids to the stored items; -1 (empty top-k slots)
+        resolve to None.  Ids outside [0, len(self)) raise a ValueError
+        naming the offender instead of surfacing an IndexError (or, worse,
+        a silently wrong negatively-indexed item)."""
+        n = len(self._items)
+        rows = np.asarray(result_ids)
+        bad = rows[(rows >= n) | (rows < -1)]
+        if bad.size:
+            raise ValueError(
+                f"items_for: id {int(bad.flat[0])} is outside the corpus "
+                f"({n} items indexed; valid ids are 0..{n - 1}, or -1 for "
+                f"an empty top-k slot)"
+            )
+        return [[self._items[int(i)] if i >= 0 else None for i in row] for row in rows]

@@ -159,11 +159,11 @@ def test_distributed_parity_all_engines():
 
 def test_retrieval_service_search_before_add_raises(rng):
     """Regression: search() on an empty service raises ValueError (a bare
-    assert would vanish under python -O)."""
+    assert would vanish under python -O) naming the service state."""
     from repro.serve.retrieval import RetrievalService
 
     svc = RetrievalService(embed_fn=lambda x: np.asarray(x), m_override=16)
-    with pytest.raises(ValueError, match=r"add\(\) first"):
+    with pytest.raises(ValueError, match=r"RetrievalService.*empty.*add\(\)"):
         svc.search(None, k=1, embeddings=rng.standard_normal((2, 8)).astype(np.float32))
 
 

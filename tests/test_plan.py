@@ -1,0 +1,388 @@
+"""Planner parity suite: execute(plan) must reproduce the pre-planner results
+bit-for-bit for every engine x layout x selection method.
+
+The four legacy entry points (GenieIndex.search, SegmentedIndex.search /
+search_multiload, multiload_search_host, distributed.make_*_search_step) are
+now thin adapters over core/plan.py; this suite pins the consolidated
+executor to the behaviour the four copies had: identical ids, counts, and
+thresholds against the sort-select oracle, across
+
+    6 engines x {monolithic, segmented, multiload, distributed} x
+    {CPQ, SPQ, SORT}
+
+plus the plan cache contract (same layout shape -> no retrace, counted via
+the per-plan trace counter) and the sharded-serving parity leg
+(RetrievalService(mesh=...) == single-device service, subprocess with 8
+forced CPU devices).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import GenieIndex, SegmentedIndex, cpq, engines
+from repro.core import plan as plan_lib
+from repro.core.types import Engine, SearchParams, TopKMethod
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+ALL_ENGINES = sorted(engines.available(), key=lambda e: e.value)
+ALL_METHODS = [TopKMethod.CPQ, TopKMethod.SPQ, TopKMethod.SORT]
+
+# uneven on purpose: a 1-row segment, a segment smaller than k, a big one
+CUTS = [0, 3, 4, 40, 90, 101]
+
+
+def _case(engine: Engine, n=101, q=4, seed=0):
+    model = engines.get(engine)
+    raw, queries, mc = model.example(np.random.default_rng(seed), n, q)
+    data = model.prepare_data(raw)
+    return model, raw, data, queries, model.resolve_max_count(data, mc)
+
+
+def _assert_same(got, want, label=""):
+    assert np.array_equal(np.asarray(got.ids), np.asarray(want.ids)), label
+    assert np.array_equal(np.asarray(got.counts), np.asarray(want.counts)), label
+
+
+# ---------------------------------------------------------------------------
+# Parity: engine x layout x method (single-process layouts)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_planner_layout_parity(engine, method):
+    """MONOLITHIC, SEGMENTED, MULTILOAD(scan), and MULTILOAD(host) plans all
+    reproduce the sort oracle's ids and counts exactly, and their thresholds
+    agree with the k-th count (Theorem 3.1)."""
+    k = 9
+    model, raw, data, queries, mc = _case(engine)
+    oracle = cpq.sort_select(
+        model.reference(data, model.prepare_queries(queries)),
+        SearchParams(k=k, max_count=mc),
+    )
+
+    idx = GenieIndex.build(engine, raw, max_count=mc, use_kernel=False)
+    seg = SegmentedIndex(engine=engine, max_count=mc, use_kernel=False)
+    for a, b in zip(CUTS, CUTS[1:]):
+        seg.add(raw[a:b])
+
+    results = {
+        "monolithic": idx.search(queries, k=k, method=method),
+        "segmented": seg.search(queries, k=k, method=method),
+        "multiload-scan": idx.search_multiload(queries, k=k, n_parts=4,
+                                               method=method),
+        "multiload-host": seg.search_multiload(queries, k=k, method=method),
+    }
+    for layout, got in results.items():
+        _assert_same(got, oracle, f"{engine.value} {method.value} {layout}")
+        if layout == "monolithic" and method == TopKMethod.SPQ:
+            continue  # SPQ's bucket threshold is its own (pre-planner) value
+        assert np.array_equal(np.asarray(got.threshold),
+                              np.asarray(oracle.counts)[:, -1]), \
+            f"{engine.value} {method.value} {layout} threshold"
+
+
+def test_planner_is_the_only_selector():
+    """The consolidation grep: select_topk / merge_ragged / pad-mask calls
+    appear only inside the executor module (core/plan.py); the four legacy
+    entry-point modules delegate instead of re-deriving the invariants."""
+    core = os.path.join(_SRC, "repro", "core")
+    for mod in ("index.py", "segments.py", "multiload.py", "distributed.py"):
+        with open(os.path.join(core, mod)) as f:
+            src = f.read()
+        for needle in ("select_topk(", "merge_ragged(", "_mask_pad_counts(",
+                       "merge_topk("):
+            assert needle not in src, f"{mod} still calls {needle[:-1]}"
+        assert "plan" in src, f"{mod} does not delegate to the planner"
+
+
+# ---------------------------------------------------------------------------
+# Plan cache: same (engine, layout shape, k, method, use_kernel) -> no retrace
+# ---------------------------------------------------------------------------
+
+def _mono_plan(idx: GenieIndex, k: int, method=TopKMethod.CPQ) -> plan_lib.QueryPlan:
+    return plan_lib.plan_search(
+        idx.engine, k, idx.max_count, layout=plan_lib.Layout.MONOLITHIC,
+        part_rows=(idx.stats.n_objects,), method=method,
+        use_kernel=idx.use_kernel,
+    )
+
+
+def test_plan_cache_no_retrace_on_repeat():
+    """Repeated searches with the same layout shape reuse the compiled
+    executable: the per-plan trace counter stays at 1."""
+    model, raw, data, queries, mc = _case(Engine.EQ)
+    idx = GenieIndex.build(Engine.EQ, raw, max_count=mc, use_kernel=False)
+    plan_lib.clear_plan_cache()
+
+    first = idx.search(queries, k=5)
+    key = _mono_plan(idx, 5)
+    assert plan_lib.trace_count(key) == 1
+
+    again = idx.search(queries, k=5)                       # same shape: cached
+    _assert_same(again, first)
+    assert plan_lib.trace_count(key) == 1, "same shape re-traced"
+
+    other_queries = raw[:4]                                # same [4, m] shape
+    idx.search(other_queries, k=5)
+    assert plan_lib.trace_count(key) == 1, "same query shape re-traced"
+
+    idx.search(queries, k=7)                               # new k: new plan
+    assert plan_lib.trace_count(key) == 1
+    assert plan_lib.trace_count(_mono_plan(idx, 7)) == 1
+
+
+def test_plan_cache_segmented_and_scan_paths():
+    """The host-loop per-part kernels and the scanned multiload executor are
+    cached too: a second identical search traces nothing new."""
+    model, raw, data, queries, mc = _case(Engine.EQ)
+    seg = SegmentedIndex(engine=Engine.EQ, max_count=mc, use_kernel=False)
+    for a, b in zip(CUTS, CUTS[1:]):
+        seg.add(raw[a:b])
+    idx = GenieIndex.build(Engine.EQ, raw, max_count=mc, use_kernel=False)
+    plan_lib.clear_plan_cache()
+
+    seg.search(queries, k=5)
+    idx.search_multiload(queries, k=5, n_parts=4)
+    size_after_first = plan_lib.plan_cache_size()
+    traces_after_first = sum(plan_lib._TRACE_COUNTS.values())
+
+    seg.search(queries, k=5)
+    idx.search_multiload(queries, k=5, n_parts=4)
+    assert plan_lib.plan_cache_size() == size_after_first
+    assert sum(plan_lib._TRACE_COUNTS.values()) == traces_after_first, \
+        "repeat search re-traced a cached executable"
+
+
+# ---------------------------------------------------------------------------
+# Plan construction: layout validation, pad accounting, describe()
+# ---------------------------------------------------------------------------
+
+def test_part_kernels_survive_corpus_growth():
+    """Growing a segmented corpus must not re-trace per-part kernels for
+    part shapes already compiled: the kernel key is the part shape (+ match,
+    clamped k, pad-mask flag), not the whole corpus layout."""
+    model, raw, data, queries, mc = _case(Engine.EQ, n=150)
+    seg = SegmentedIndex(engine=Engine.EQ, max_count=mc, use_kernel=False)
+    plan_lib.clear_plan_cache()
+    seg.add(raw[:50])
+    first = seg.search(queries, k=5)
+    traces = sum(plan_lib._TRACE_COUNTS.values())
+    seg.add(raw[50:100])                       # same 50-row seal shape
+    seg.add(raw[100:150])
+    grown = seg.search(queries, k=5)
+    assert sum(plan_lib._TRACE_COUNTS.values()) == traces, \
+        "corpus growth re-traced an already-compiled part kernel"
+    mono = GenieIndex.build(Engine.EQ, raw, max_count=mc, use_kernel=False)
+    _assert_same(grown, mono.search(queries, k=5))
+    mono50 = GenieIndex.build(Engine.EQ, raw[:50], max_count=mc, use_kernel=False)
+    _assert_same(first, mono50.search(queries, k=5))
+
+
+def test_plan_cache_is_bounded(monkeypatch):
+    """The executable cache evicts FIFO past PLAN_CACHE_CAP instead of
+    pinning stale jitted programs forever."""
+    model, raw, data, queries, mc = _case(Engine.EQ, n=24)
+    monkeypatch.setattr(plan_lib, "PLAN_CACHE_CAP", 3)
+    plan_lib.clear_plan_cache()
+    idx = GenieIndex.build(Engine.EQ, raw, max_count=mc, use_kernel=False)
+    for k in (1, 2, 3, 4, 5):
+        idx.search(queries, k=k)
+    assert plan_lib.plan_cache_size() <= 3
+
+
+def test_scan_layout_rejects_ragged_parts():
+    """The scanned multiload executor derives offsets as i * part_rows[0];
+    ragged parts must be rejected at plan time (host_loop streams them)."""
+    with pytest.raises(ValueError, match="uniform part_rows"):
+        plan_lib.plan_search(Engine.EQ, 3, 16,
+                             layout=plan_lib.Layout.MULTILOAD,
+                             part_rows=(3, 50, 48), n_objects=101)
+    ok = plan_lib.plan_search(Engine.EQ, 3, 16,
+                              layout=plan_lib.Layout.MULTILOAD,
+                              part_rows=(3, 50, 48), n_objects=101,
+                              host_loop=True)
+    assert ok.host_loop
+
+
+def test_plan_search_validates_layout():
+    with pytest.raises(ValueError, match="n_parts"):
+        plan_lib.plan_search(Engine.EQ, 3, 16,
+                             layout=plan_lib.Layout.MULTILOAD, n_parts=0,
+                             n_objects=10)
+    with pytest.raises(ValueError, match="part_rows"):
+        plan_lib.plan_search(Engine.EQ, 3, 16,
+                             layout=plan_lib.Layout.SEGMENTED)
+    with pytest.raises(ValueError, match="monolithic"):
+        plan_lib.plan_search(Engine.EQ, 3, 16, part_rows=(4, 4))
+    with pytest.raises(ValueError, match="positive"):
+        plan_lib.plan_search(Engine.EQ, 3, 16,
+                             layout=plan_lib.Layout.SEGMENTED, part_rows=(4, 0))
+
+
+def test_plan_layout_accounting_and_describe():
+    plan = plan_lib.plan_search(
+        Engine.EQ, 7, 16, layout=plan_lib.Layout.MULTILOAD, n_parts=4,
+        n_objects=101, use_kernel=False,
+    )
+    assert plan.part_rows == (26, 26, 26, 26)
+    assert plan.pad_rows == 3 and plan.total_rows == 104
+    assert plan.part_k(2) == 2 and plan.part_k(50) == 7
+    d = plan.describe()
+    assert d["layout"] == "multiload" and d["engine"] == "eq"
+    assert d["merge"] == "incremental-pairwise" and d["pad_rows"] == 3
+
+    host = plan_lib.plan_search(
+        Engine.EQ, 7, 16, layout=plan_lib.Layout.MULTILOAD,
+        part_rows=(3, 50, 48), n_objects=101, host_loop=True, use_kernel=False,
+    )
+    assert host.describe()["merge"] == "ragged-buffer"
+    dist = plan_lib.plan_search(
+        Engine.EQ, 7, 16, layout=plan_lib.Layout.DISTRIBUTED, n_objects=101,
+        hierarchical=True, mesh_axes=("pod", "data", "model"),
+    )
+    assert dist.describe()["merge"] == "collective-hierarchical"
+
+
+def test_pad_and_stack_fills_with_engine_pad():
+    model, raw, data, queries, mc = _case(Engine.EQ)
+    plan = plan_lib.plan_search(
+        Engine.EQ, 7, mc, layout=plan_lib.Layout.MULTILOAD, n_parts=4,
+        n_objects=101, use_kernel=False,
+    )
+    chunks = plan_lib.pad_and_stack(plan, data)
+    assert chunks.shape[:2] == (4, 26)
+    flat = np.asarray(chunks).reshape(104, -1)
+    assert np.array_equal(flat[:101], np.asarray(data))
+    assert np.all(flat[101:] == model.pad_value)
+
+
+# ---------------------------------------------------------------------------
+# Distributed layout parity (subprocess: forced multi-device CPU)
+# ---------------------------------------------------------------------------
+
+def test_planner_distributed_parity():
+    """Every engine x {CPQ, SPQ, SORT} through the DISTRIBUTED layout (flat
+    and hierarchical meshes) equals the sort oracle exactly -- the same plan
+    executor as single-device, merged collectively."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC
+    env.pop("JAX_PLATFORMS", None)
+    code = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import cpq, distributed, engines
+        from repro.core import plan as plan_lib
+        from repro.core.types import SearchParams, TopKMethod
+        from repro.launch import mesh as mesh_lib
+
+        meshes = [mesh_lib.make_mesh((2, 4), ('data', 'model')),
+                  mesh_lib.make_mesh((2, 2, 2), ('pod', 'data', 'model'))]
+        for eng in sorted(engines.available(), key=lambda e: e.value):
+            model = engines.get(eng)
+            raw, rawq, mc = model.example(np.random.default_rng(0), 128, 4)
+            data = model.prepare_data(raw)
+            queries = model.prepare_queries(rawq)
+            mx = model.resolve_max_count(data, mc)
+            want = cpq.sort_select(model.reference(data, queries),
+                                   SearchParams(k=7, max_count=mx))
+            for mesh in meshes:
+                dd = jax.device_put(data, distributed.data_sharding(mesh))
+                qq = jax.tree_util.tree_map(
+                    lambda x: jax.device_put(x, distributed.replicated(mesh, 2)),
+                    queries)
+                for method in TopKMethod:
+                    for hier in (False, True):
+                        plan = plan_lib.plan_search(
+                            eng, 7, mx, layout=plan_lib.Layout.DISTRIBUTED,
+                            method=method, use_kernel=False, hierarchical=hier,
+                            mesh_axes=tuple(mesh.axis_names))
+                        res = plan_lib.execute(plan, dd, qq, mesh=mesh)
+                        label = (eng.value, tuple(mesh.axis_names),
+                                 method.value, hier)
+                        assert np.array_equal(np.asarray(res.ids),
+                                              np.asarray(want.ids)), label
+                        assert np.array_equal(np.asarray(res.counts),
+                                              np.asarray(want.counts)), label
+        print('planner distributed parity OK')
+    """)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "planner distributed parity OK" in out.stdout
+
+
+def test_retrieval_service_sharded_serving_parity():
+    """RetrievalService(mesh=...) serves a segmented corpus sharded across 8
+    devices with ids/counts/sims identical to the single-device service, and
+    the sharded placement cache refreshes when the corpus changes."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC
+    env.pop("JAX_PLATFORMS", None)
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from repro.launch import mesh as mesh_lib
+        from repro.serve.retrieval import RetrievalService
+
+        mesh = mesh_lib.make_mesh((2, 4), ('data', 'model'))
+        rng = np.random.default_rng(0)
+        pts = rng.standard_normal((130, 16)).astype(np.float32)
+        for scheme in ('e2lsh', 'simhash', 'minhash'):
+            single = RetrievalService(embed_fn=lambda x: np.asarray(x),
+                                      scheme=scheme, m_override=96)
+            sharded = RetrievalService(embed_fn=lambda x: np.asarray(x),
+                                       scheme=scheme, m_override=96, mesh=mesh)
+            for a, b in [(0, 30), (30, 37), (37, 90), (90, 130)]:
+                single.add(list(range(a, b)), embeddings=pts[a:b])
+                sharded.add(list(range(a, b)), embeddings=pts[a:b])
+            q = pts[88:96] + 0.01
+            r1, s1 = single.search(None, k=5, embeddings=q)
+            r2, s2 = sharded.search(None, k=5, embeddings=q)
+            assert np.array_equal(np.asarray(r1.ids), np.asarray(r2.ids)), scheme
+            assert np.array_equal(np.asarray(r1.counts),
+                                  np.asarray(r2.counts)), scheme
+            assert np.allclose(s1, s2), scheme
+            placed = sharded._placed
+            sharded.search(None, k=5, embeddings=q)
+            assert sharded._placed is placed, 'placement not cached'
+            sharded.add([999], embeddings=pts[:1])
+            sharded.search(None, k=5, embeddings=q)
+            assert sharded._placed is not placed, 'placement not refreshed'
+            assert sharded.items_for(np.asarray(r2.ids))[0][0] is not None
+        print('sharded serving parity OK')
+    """)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "sharded serving parity OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Serving-layer satellites: clear errors for empty service / bad ids
+# ---------------------------------------------------------------------------
+
+def test_retrieval_service_empty_search_names_service_state():
+    from repro.serve.retrieval import RetrievalService
+
+    svc = RetrievalService(embed_fn=lambda x: np.asarray(x), m_override=16)
+    with pytest.raises(ValueError, match="RetrievalService.*empty.*add"):
+        svc.search(None, k=3, embeddings=np.zeros((1, 8), np.float32))
+    with pytest.raises(ValueError, match="RetrievalService.*empty.*add"):
+        svc.index_stats
+
+
+def test_retrieval_service_items_for_validates_ids(rng):
+    from repro.serve.retrieval import RetrievalService
+
+    svc = RetrievalService(embed_fn=lambda x: np.asarray(x), m_override=16)
+    svc.add([10, 11, 12], embeddings=rng.standard_normal((3, 8)).astype(np.float32))
+    assert svc.items_for(np.asarray([[0, 2, -1]])) == [[10, 12, None]]
+    with pytest.raises(ValueError, match="3 items.*0..2|id 3"):
+        svc.items_for(np.asarray([[0, 3]]))
+    with pytest.raises(ValueError, match="id -5"):
+        svc.items_for(np.asarray([[-5]]))

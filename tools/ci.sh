@@ -18,7 +18,11 @@ python -m pytest -q -k "matrix and not distributed" tests/test_engine_matrix.py
 echo "--- segment/merge conformance (segmented == monolithic) ---"
 python -m pytest -q -k "not distributed" tests/test_segments.py
 
+echo "--- planner parity (execute(plan) == legacy paths, plan-cache hits) ---"
+python -m pytest -q -k "not distributed and not sharded_serving" tests/test_plan.py
+
 if [[ "${1:-}" == "--fast" ]]; then
+    # (tests/test_plan.py's fast, non-subprocess lane already ran above)
     python -m pytest -x -q \
         tests/test_engines.py tests/test_engine_matrix.py tests/test_cpq.py \
         tests/test_multiload.py tests/test_kernels.py tests/test_system.py
@@ -32,4 +36,7 @@ python examples/quickstart.py
 
 echo "--- add-throughput micro-benchmark (BENCH JSON; fails if not flat) ---"
 PYTHONPATH=".:$PYTHONPATH" python benchmarks/bench_add_throughput.py
+
+echo "--- serve-latency micro-benchmark (BENCH JSON; cached vs uncached plan) ---"
+PYTHONPATH=".:$PYTHONPATH" python benchmarks/bench_serve_latency.py
 echo "CI smoke OK"

@@ -11,6 +11,15 @@ is conservative).  HLO_FLOPs/bytes come from the scan-unrolled small-depth
 extrapolation (see launch/dryrun.py) because XLA's cost analysis counts a
 while-loop body once.  The dominant term approximates the step time on real
 hardware assuming perfect overlap of the other two.
+
+`run()` adds the signature-storage roofline (core/packing.py): for each
+engine with a PACKED layout (COSINE sign-bit words, TANIMOTO uint8 buckets)
+it models the bytes the match phase moves -- signatures + queries read once,
+counts written once -- under WIDE vs PACKED storage, times both reference
+match paths, and emits a ``BENCH {json}`` line.  The match phase is
+memory-bound (one compare per signature byte), so bytes-moved is the
+roofline axis that matters; `main()` gates packed bytes-per-object at
+<= 1/4 of wide for both engines (tools/ci.sh).
 """
 from __future__ import annotations
 
@@ -97,12 +106,114 @@ def format_table(rows: list[dict]) -> str:
     return "\n".join(lines)
 
 
-def main() -> None:
+def print_tables() -> None:
     for mesh in ("single", "multi"):
         rows = table(mesh)
         if rows:
             print(f"\n=== Roofline ({mesh} mesh, {256 if mesh=='single' else 512} chips) ===")
             print(format_table(rows))
+
+
+# ---------------------------------------------------------------------------
+# Signature-storage roofline: match-phase bytes moved, WIDE vs PACKED
+# ---------------------------------------------------------------------------
+
+def _match_phase_bytes(data, queries, q: int, n: int) -> float:
+    """Bytes the match phase moves: signatures + queries read once, int32
+    counts written once.  This is the HBM-traffic model the packed layout
+    attacks; compute per byte is constant, so the ratio is the speedup bound."""
+    return float(data.size * data.dtype.itemsize
+                 + queries.size * queries.dtype.itemsize
+                 + q * n * 4)
+
+
+def run(n: int = 4096, q: int = 128, v: int = 2048, m: int = 64) -> list:
+    """Signature-storage roofline for the packable engines.
+
+    CPU wall-times here are relative evidence (benchmarks/common.py); the
+    load-bearing numbers are the analytic bytes-moved and the storage
+    bytes-per-object, both exact.
+    """
+    import jax
+    import numpy as np
+
+    from benchmarks.common import Row, timeit
+    from repro.core import engines as engines_lib
+    from repro.core.types import Engine, SignatureLayout
+
+    rng = np.random.default_rng(0)
+    raw = {
+        # raw float vectors; prepare_data sign-quantizes to int8 [N, V]
+        Engine.COSINE: rng.standard_normal((n + q, v)).astype(np.float32),
+        # minhash bucket ids within the packed uint8 domain (<= 253)
+        Engine.TANIMOTO: rng.integers(0, 200, size=(n + q, m), dtype=np.int32),
+    }
+    rows, engines_rep = [], {}
+    for engine, pts in raw.items():
+        model = engines_lib.get(engine)
+        wide_d = model.prepare_data(pts[:n])
+        wide_q = model.prepare_queries_for(pts[n:], SignatureLayout.WIDE)
+        packed_d = model.pack_data(wide_d)
+        packed_q = model.prepare_queries_for(pts[n:], SignatureLayout.PACKED)
+        wide_match = jax.jit(model.match_fn(False, SignatureLayout.WIDE))
+        packed_match = jax.jit(model.match_fn(False, SignatureLayout.PACKED))
+
+        wide_bytes = _match_phase_bytes(wide_d, wide_q, q, n)
+        packed_bytes = _match_phase_bytes(packed_d, packed_q, q, n)
+        wide_us = timeit(wide_match, wide_d, wide_q)
+        packed_us = timeit(packed_match, packed_d, packed_q)
+        wide_bpo = wide_d.size * wide_d.dtype.itemsize / n
+        packed_bpo = packed_d.size * packed_d.dtype.itemsize / n
+        engines_rep[engine.value] = dict(
+            n=n, q=q, width=int(wide_d.shape[1]),
+            bytes_per_object_wide=wide_bpo,
+            bytes_per_object_packed=packed_bpo,
+            storage_ratio=round(packed_bpo / wide_bpo, 4),
+            match_bytes_wide=wide_bytes,
+            match_bytes_packed=packed_bytes,
+            bytes_reduction=round(wide_bytes / packed_bytes, 2),
+            wide_us=round(wide_us, 1),
+            packed_us=round(packed_us, 1),
+            achieved_gbps_wide=round(wide_bytes / wide_us / 1e3, 3),
+            achieved_gbps_packed=round(packed_bytes / packed_us / 1e3, 3),
+        )
+        rows.append(Row(f"signature_roofline.{engine.value}.wide", wide_us,
+                        f"bytes={wide_bytes:.0f}"))
+        rows.append(Row(f"signature_roofline.{engine.value}.packed", packed_us,
+                        f"reduction={engines_rep[engine.value]['bytes_reduction']}x"))
+    report = dict(
+        name="signature_roofline",
+        engines=engines_rep,
+        # gates consumed by main() / tools/ci.sh
+        storage_quarter_or_better=all(
+            r["bytes_per_object_packed"] <= r["bytes_per_object_wide"] / 4
+            for r in engines_rep.values()),
+        match_bytes_halved_somewhere=any(
+            r["bytes_reduction"] >= 2.0 for r in engines_rep.values()),
+    )
+    print("BENCH " + json.dumps(report), flush=True)
+    _LAST_REPORT.update(report)
+    return rows
+
+
+_LAST_REPORT: dict = {}
+
+
+def main() -> None:
+    for r in run():
+        print(r.csv())
+    if not _LAST_REPORT.get("storage_quarter_or_better"):
+        raise SystemExit(
+            "signature packing regressed: packed bytes-per-object exceeds "
+            "1/4 of wide for a packable engine -- "
+            + json.dumps(_LAST_REPORT.get("engines", {}))
+        )
+    if not _LAST_REPORT.get("match_bytes_halved_somewhere"):
+        raise SystemExit(
+            "signature packing regressed: no engine halves match-phase "
+            "bytes moved -- " + json.dumps(_LAST_REPORT.get("engines", {}))
+        )
+    print_tables()
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ def main() -> None:
         fig12_load_balance,
         fig13_cpq,
         fig14_approx_ratio,
+        roofline,
         table1_profiling,
         table2_multiload,
         table5_knn_predict,
@@ -29,7 +30,7 @@ def main() -> None:
         fig8_num_hash, fig9_multiquery, fig10_datasize, fig12_load_balance,
         table1_profiling, table2_multiload, fig13_cpq, fig14_approx_ratio,
         table5_knn_predict, table6_sequence, bench_add_throughput,
-        bench_serve_latency,
+        bench_serve_latency, roofline,
     ]
     print("name,us_per_call,derived")
     failures = 0
@@ -46,7 +47,7 @@ def main() -> None:
     try:
         from benchmarks import roofline
 
-        roofline.main()
+        roofline.print_tables()
     except Exception as e:
         print(f"# roofline summary unavailable: {e}", file=sys.stderr)
     if failures:

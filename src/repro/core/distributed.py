@@ -37,7 +37,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import engines as _engines
 from repro.core import plan as _plan
-from repro.core.types import Engine, SearchParams, TopKResult
+from repro.core.types import Engine, SearchParams, SignatureLayout, TopKResult
 
 # Back-compat re-exports: the version-portable shard_map shims moved into the
 # executor module with the shard_map body itself.
@@ -50,12 +50,15 @@ MatchLike = Union[Engine, str, "_engines.MatchModel",
 
 def _plan_sharded(mesh: jax.sharding.Mesh, params: SearchParams,
                   match_fn: MatchLike, n_objects: int | None,
-                  hierarchical: bool) -> _plan.QueryPlan:
+                  hierarchical: bool,
+                  signature_layout: SignatureLayout | str = SignatureLayout.WIDE,
+                  ) -> _plan.QueryPlan:
     return _plan.plan_search(
         match_fn, params.k, params.max_count, layout=_plan.Layout.DISTRIBUTED,
         n_objects=n_objects, method=params.method,
         candidate_cap=params.candidate_cap, use_kernel=params.use_kernel,
         hierarchical=hierarchical, mesh_axes=tuple(mesh.axis_names),
+        signature_layout=signature_layout,
     )
 
 
@@ -64,6 +67,7 @@ def make_search_step(
     params: SearchParams,
     match_fn: MatchLike,
     n_objects: int | None = None,
+    signature_layout: SignatureLayout | str = SignatureLayout.WIDE,
 ) -> Callable[[jnp.ndarray, Any], TopKResult]:
     """Build the jittable distributed search step.
 
@@ -79,8 +83,15 @@ def make_search_step(
     (SegmentedIndex.concat_data), and rows with global id >= n_objects are
     pad fill -- their counts are forced to -1 before per-shard selection so
     they can never reach any candidate buffer.
+
+    `signature_layout=PACKED` dispatches the packed per-shard match kernels:
+    data and queries must arrive already packed (core/packing.py -- a PACKED
+    SegmentedIndex's concat_data / prepare_queries_for produce them), so
+    every shard moves the bit-packed bytes and the all-gathered candidate
+    traffic is unchanged.
     """
-    plan = _plan_sharded(mesh, params, match_fn, n_objects, hierarchical=False)
+    plan = _plan_sharded(mesh, params, match_fn, n_objects, hierarchical=False,
+                         signature_layout=signature_layout)
     return _plan.executable(plan, mesh=mesh)
 
 
@@ -89,6 +100,7 @@ def make_hierarchical_search_step(
     params: SearchParams,
     match_fn: MatchLike,
     n_objects: int | None = None,
+    signature_layout: SignatureLayout | str = SignatureLayout.WIDE,
 ):
     """Two-level merge variant: reduce candidate buffers inside a pod first
     (cheap ICI), then across pods (expensive DCN) -- merge order does not
@@ -100,7 +112,8 @@ def make_hierarchical_search_step(
     exactly as in `make_search_step`.
     """
     hier = tuple(mesh.axis_names)[0] == "pod"
-    plan = _plan_sharded(mesh, params, match_fn, n_objects, hierarchical=hier)
+    plan = _plan_sharded(mesh, params, match_fn, n_objects, hierarchical=hier,
+                         signature_layout=signature_layout)
     return _plan.executable(plan, mesh=mesh)
 
 

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import match as _match
-from repro.core.types import Engine, IndexStats
+from repro.core import packing as _packing
+from repro.core.types import Engine, IndexStats, SignatureLayout
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,22 +64,90 @@ class MatchModel:
     # parity/pad/tie conformance tests (tests/test_engine_matrix.py) for free.
     example: Optional[Callable[[Any, int, int], tuple]] = None
 
+    # -- PACKED signature layout (core/packing.py) --------------------------
+    # All None/unset => the engine is WIDE-only and PACKED plans are rejected.
+    # pack_data / pack_queries transform *prepared* (canonical WIDE) arrays
+    # once at index-seal / query-canonicalisation time; packed_reference and
+    # packed_kernel keep the canonical ``fn(data, queries) -> counts [Q, N]``
+    # signature on the packed arrays, with counts bit-for-bit equal to WIDE.
+    pack_data: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+    pack_queries: Optional[Callable[[Any], Any]] = None
+    packed_reference: Optional[Callable[[jnp.ndarray, Any], jnp.ndarray]] = None
+    packed_kernel: Optional[Callable[[jnp.ndarray, Any], jnp.ndarray]] = None
+    # fused match -> count -> per-tile local top-k on packed arrays:
+    # fn(data, queries, k) -> (ids, counts) candidate buffers [Q, n_tiles*kc]
+    # in per-tile (count desc, id asc) order, pads id -1 / count -1
+    packed_fused_topk: Optional[Callable[[jnp.ndarray, Any, int], tuple]] = None
+    # multiload row fill in the packed domain (same never-out-scores contract
+    # as pad_value; pad rows are id-masked upstream regardless)
+    packed_pad_value: Any = None
+    # packed footprint in bytes, computed from the WIDE prepared array
+    packed_bytes: Optional[Callable[[jnp.ndarray], int]] = None
+
+    @property
+    def supports_packed(self) -> bool:
+        return self.pack_data is not None
+
+    def require_layout(self, layout: SignatureLayout | str) -> SignatureLayout:
+        layout = SignatureLayout(layout)
+        if layout is SignatureLayout.PACKED and not self.supports_packed:
+            raise ValueError(
+                f"engine {self.engine.value!r} has no packed signature format; "
+                f"use SignatureLayout.WIDE"
+            )
+        return layout
+
+    def pad_value_for(self, layout: SignatureLayout | str) -> Any:
+        if SignatureLayout(layout) is SignatureLayout.PACKED:
+            self.require_layout(layout)
+            return self.packed_pad_value
+        return self.pad_value
+
     # -- dispatch -----------------------------------------------------------
-    def match_fn(self, use_kernel: bool) -> Callable[[jnp.ndarray, Any], jnp.ndarray]:
-        """The canonical match callable for this engine (kernel or reference)."""
+    def match_fn(
+        self,
+        use_kernel: bool,
+        signature_layout: SignatureLayout | str = SignatureLayout.WIDE,
+    ) -> Callable[[jnp.ndarray, Any], jnp.ndarray]:
+        """The canonical match callable for this engine (kernel or reference),
+        operating on arrays in the given signature layout."""
+        if self.require_layout(signature_layout) is SignatureLayout.PACKED:
+            return self.packed_kernel if use_kernel else self.packed_reference
         return self.kernel if use_kernel else self.reference
 
-    def match_counts(self, data: jnp.ndarray, queries: Any, use_kernel: bool) -> jnp.ndarray:
-        """counts int32 [Q, N]; `queries` may be raw (canonicalised here)."""
-        return self.match_fn(use_kernel)(data, self.prepare_queries(queries))
+    def prepare_queries_for(
+        self, queries: Any,
+        signature_layout: SignatureLayout | str = SignatureLayout.WIDE,
+    ) -> Any:
+        """Raw queries -> canonical query pytree in the given layout
+        (canonicalise WIDE first, then pack)."""
+        q = self.prepare_queries(queries)
+        if self.require_layout(signature_layout) is SignatureLayout.PACKED:
+            q = self.pack_queries(q)
+        return q
+
+    def match_counts(self, data: jnp.ndarray, queries: Any, use_kernel: bool,
+                     signature_layout: SignatureLayout | str = SignatureLayout.WIDE) -> jnp.ndarray:
+        """counts int32 [Q, N]; `queries` may be raw (canonicalised here) and
+        `data` must already be in `signature_layout`."""
+        return self.match_fn(use_kernel, signature_layout)(
+            data, self.prepare_queries_for(queries, signature_layout))
 
     # -- build-time policy --------------------------------------------------
     def build_stats(self, data: jnp.ndarray) -> IndexStats:
+        """Index statistics from the *prepared WIDE* array (postings, count
+        bounds, and the packed footprint all read the logical layout -- call
+        this before pack_data, never on the packed array)."""
+        wide_bytes = int(data.size) * data.dtype.itemsize
         return IndexStats(
             n_objects=int(data.shape[0]),
             n_lists=int(data.shape[1]),
             total_postings=int(self.postings_count(data)),
-            bytes_device=int(data.size) * data.dtype.itemsize,
+            bytes_device=wide_bytes,
+            bytes_signatures_wide=wide_bytes,
+            bytes_signatures_packed=(
+                int(self.packed_bytes(data)) if self.packed_bytes else 0
+            ),
             extra={"engine": self.engine.value},
         )
 
@@ -133,15 +202,17 @@ def available() -> tuple[Engine, ...]:
     return tuple(_REGISTRY)
 
 
-def resolve_match_fn(engine, use_kernel: bool = False):
+def resolve_match_fn(engine, use_kernel: bool = False,
+                     signature_layout: SignatureLayout | str = SignatureLayout.WIDE):
     """Engine/str/MatchModel/callable -> canonical match callable.
 
     Raw callables pass through untouched (back-compat for code that hands a
-    bare ``fn(data, queries)`` to distributed/multiload search).
+    bare ``fn(data, queries)`` to distributed/multiload search) -- the caller
+    owns the layout contract in that case.
     """
     if callable(engine) and not isinstance(engine, (MatchModel, Engine, str)):
         return engine
-    return get(engine).match_fn(use_kernel)
+    return get(engine).match_fn(use_kernel, signature_layout)
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +254,30 @@ def _kernel_cosine(data, queries):
     from repro.kernels import ops as kops
 
     return kops.cosine_count(data, queries)
+
+
+def _kernel_packed_cosine(data, queries):
+    from repro.kernels import ops as kops
+
+    return kops.packed_cosine_count(data, queries)
+
+
+def _kernel_packed_cosine_topk(data, queries, k):
+    from repro.kernels import ops as kops
+
+    return kops.packed_cosine_topk(data, queries, k=k)
+
+
+def _kernel_packed_tanimoto(data, queries):
+    from repro.kernels import ops as kops
+
+    return kops.packed_tanimoto_count(data, queries)
+
+
+def _kernel_packed_tanimoto_topk(data, queries, k):
+    from repro.kernels import ops as kops
+
+    return kops.packed_tanimoto_topk(data, queries, k=k)
 
 
 def _sign_quantize(x) -> jnp.ndarray:
@@ -262,6 +357,14 @@ register(MatchModel(
     pad_value=-1,                                          # outside bucket range
     example=lambda rng, n, q: (rng.integers(0, 64, (n, 20)).astype(np.int32),
                                rng.integers(0, 64, (q, 20)).astype(np.int32), None),
+    # PACKED: uint8 bucket ids (rehash domain <= 253; 254/255 pad sentinels)
+    pack_data=_packing.pack_buckets,
+    pack_queries=_packing.pack_buckets,
+    packed_reference=_packing.packed_tanimoto_match,
+    packed_kernel=_kernel_packed_tanimoto,
+    packed_fused_topk=_kernel_packed_tanimoto_topk,
+    packed_pad_value=_packing.PACKED_BUCKET_PAD_DATA,      # never collides
+    packed_bytes=_packing.packed_bytes_tanimoto,
 ))
 
 register(MatchModel(
@@ -276,4 +379,13 @@ register(MatchModel(
     pad_value=0,                                           # dot-neutral; id-masked
     example=lambda rng, n, q: (rng.standard_normal((n, 32)).astype(np.float32),
                                rng.standard_normal((q, 32)).astype(np.float32), None),
+    # PACKED: 32 signs per int32 word, matched by XOR+popcount; query tail
+    # bits 1 vs data tail bits 0 keep counts exact without knowing V
+    pack_data=_packing.pack_signs_data,
+    pack_queries=_packing.pack_signs_queries,
+    packed_reference=_packing.packed_cosine_match,
+    packed_kernel=_kernel_packed_cosine,
+    packed_fused_topk=_kernel_packed_cosine_topk,
+    packed_pad_value=0,                                    # all-zero words; id-masked
+    packed_bytes=_packing.packed_bytes_cosine,
 ))

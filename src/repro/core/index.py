@@ -28,7 +28,8 @@ import jax.numpy as jnp
 
 from repro.core import engines as _engines
 from repro.core import plan as _plan
-from repro.core.types import Engine, IndexStats, TopKMethod, TopKResult
+from repro.core.types import (Engine, IndexStats, SignatureLayout,
+                              TopKMethod, TopKResult)
 
 
 @dataclasses.dataclass
@@ -39,30 +40,50 @@ class GenieIndex:
     data_hi: Optional[jnp.ndarray] = None  # unused (reserved for interval data)
     stats: IndexStats = dataclasses.field(default_factory=IndexStats)
     use_kernel: bool = True
+    # storage format of `data` (core/packing.py); PACKED indexes hold the
+    # bit/byte-packed array and dispatch the packed match kernels
+    signature_layout: SignatureLayout = SignatureLayout.WIDE
 
     # ------------------------------------------------------------------
     # Builders
     # ------------------------------------------------------------------
     @classmethod
     def build(cls, engine: Engine | str, data, max_count: int | None = None,
-              use_kernel: bool = True) -> "GenieIndex":
+              use_kernel: bool = True,
+              signature_layout: SignatureLayout | str = SignatureLayout.WIDE,
+              ) -> "GenieIndex":
         """Generic builder: any registered engine, one code path.
 
         `max_count` defaults to the engine's derived count bound (e.g. m for
         EQ, #attributes for RANGE); engines without a derivable bound
         (MINSUM, IP) require it explicitly.
+
+        `signature_layout=PACKED` packs the prepared array once at seal time
+        (COSINE signs -> uint32-word bitfields, TANIMOTO bucket ids -> uint8)
+        for engines with a packed format; counts and top-k results are
+        bit-for-bit identical to WIDE, only the device footprint and HBM
+        traffic shrink.
         """
         model = _engines.get(engine)
+        layout = model.require_layout(signature_layout)
         t0 = time.time()
         arr = model.prepare_data(data)
+        # stats, postings, and the count bound all read the *logical* WIDE
+        # shape -- resolve them before packing (the packed array's width is
+        # words/bytes, not signature slots)
         stats = model.build_stats(arr)
+        max_count = model.resolve_max_count(arr, max_count)
+        if layout is SignatureLayout.PACKED:
+            arr = model.pack_data(arr)
+            stats.signature_layout = layout.value
+            stats.bytes_device = int(arr.size) * arr.dtype.itemsize
         # block: prepare_data dispatches async jnp ops; without this the
         # timer reports dispatch time, not build time
         jax.block_until_ready(arr)
         stats.build_seconds = time.time() - t0
-        return cls(engine=model.engine,
-                   max_count=model.resolve_max_count(arr, max_count),
-                   data=arr, stats=stats, use_kernel=use_kernel)
+        return cls(engine=model.engine, max_count=max_count,
+                   data=arr, stats=stats, use_kernel=use_kernel,
+                   signature_layout=layout)
 
     # Thin named aliases kept for API compatibility with existing callers.
     @classmethod
@@ -89,17 +110,19 @@ class GenieIndex:
 
     @classmethod
     def build_tanimoto(cls, minhash_sigs, max_count: int | None = None,
-                       use_kernel: bool = True):
+                       use_kernel: bool = True,
+                       signature_layout: SignatureLayout | str = SignatureLayout.WIDE):
         """TANIMOTO engine over minhash sketches int32 [N, m]."""
         return cls.build(Engine.TANIMOTO, minhash_sigs, max_count=max_count,
-                         use_kernel=use_kernel)
+                         use_kernel=use_kernel, signature_layout=signature_layout)
 
     @classmethod
     def build_cosine(cls, vectors, max_count: int | None = None,
-                     use_kernel: bool = True):
+                     use_kernel: bool = True,
+                     signature_layout: SignatureLayout | str = SignatureLayout.WIDE):
         """COSINE engine over raw vectors [N, V] (sign-quantized at build)."""
         return cls.build(Engine.COSINE, vectors, max_count=max_count,
-                         use_kernel=use_kernel)
+                         use_kernel=use_kernel, signature_layout=signature_layout)
 
     # ------------------------------------------------------------------
     # Matching + selection
@@ -108,9 +131,14 @@ class GenieIndex:
     def model(self) -> _engines.MatchModel:
         return _engines.get(self.engine)
 
+    def prepare_queries(self, queries):
+        """Raw queries -> canonical pytree in this index's signature layout."""
+        return self.model.prepare_queries_for(queries, self.signature_layout)
+
     def match_counts(self, queries) -> jnp.ndarray:
         """counts int32 [Q, N] under this index's engine."""
-        return self.model.match_counts(self.data, queries, self.use_kernel)
+        return self.model.match_counts(self.data, queries, self.use_kernel,
+                                       self.signature_layout)
 
     def search(self, queries, k: int, method: TopKMethod = TopKMethod.CPQ,
                candidate_cap: int | None = None) -> TopKResult:
@@ -118,8 +146,9 @@ class GenieIndex:
             self.engine, k, self.max_count, layout=_plan.Layout.MONOLITHIC,
             part_rows=(self.stats.n_objects,), method=method,
             candidate_cap=candidate_cap, use_kernel=self.use_kernel,
+            signature_layout=self.signature_layout,
         )
-        return _plan.execute(plan, self.data, self.model.prepare_queries(queries))
+        return _plan.execute(plan, self.data, self.prepare_queries(queries))
 
     def search_multiload(self, queries, k: int, n_parts: int,
                          method: TopKMethod = TopKMethod.CPQ) -> TopKResult:
@@ -132,7 +161,7 @@ class GenieIndex:
         plan = _plan.plan_search(
             self.engine, k, self.max_count, layout=_plan.Layout.MULTILOAD,
             n_parts=n_parts, n_objects=self.stats.n_objects, method=method,
-            use_kernel=self.use_kernel,
+            use_kernel=self.use_kernel, signature_layout=self.signature_layout,
         )
         chunks = _plan.pad_and_stack(plan, self.data)
-        return _plan.execute(plan, chunks, self.model.prepare_queries(queries))
+        return _plan.execute(plan, chunks, self.prepare_queries(queries))

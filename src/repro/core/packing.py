@@ -1,0 +1,148 @@
+"""Bit/byte-packed signature formats (FLASH's core trick, Wang et al.
+1709.01190; compact codes as the billion-scale prerequisite, Johnson et al.
+1702.08734).
+
+The WIDE layouts spend far more bits than the information they carry: COSINE
+stores one +-1 *sign* (1 bit) per int8 element -- and the kernel upcasts it
+to bf16 on the way to the MXU (16 bits moved per bit of signal) -- while
+TANIMOTO stores a minhash bucket id (< 2^8 for practical bucket counts) per
+int32 element.  This module defines the PACKED formats and their pure-jnp
+match references; the Pallas hot paths live in kernels/packed_cosine.py and
+kernels/packed_tanimoto.py.
+
+COSINE / sign vectors -> uint32 bitfields
+    word w, bit b of a packed row holds (sign[32*w + b] > 0); rows narrow
+    from V bytes (int8) to ceil(V/32)*4 bytes.  The sign-agreement count is
+    recovered by XOR + popcount:
+
+        agreements = 32*W - popcount(q_words XOR d_words)
+
+    with the *data* tail bits (past V in the last word) packed as 0 and the
+    *query* tail bits packed as 1, so every tail bit is a guaranteed
+    disagreement and the identity needs no knowledge of V -- the packed
+    match keeps the canonical ``fn(data, queries) -> counts`` signature.
+
+TANIMOTO / minhash sketches -> uint8 bucket ids
+    bucket ids narrow from 4 bytes to 1 when the rehash domain fits a byte;
+    the match is the same equality compare on byte lanes.  Values 254/255
+    are reserved as query/data pad sentinels (kernels/ops.py), so packing
+    requires bucket ids <= PACKED_BUCKET_MAX.
+
+Both packed matches are bit-for-bit identical to their WIDE references --
+the conformance legs in tests/test_engine_matrix.py and tests/test_plan.py
+pin that across every layout x selection method.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import match as _match
+
+WORD_BITS = 32
+# uint8 sentinels reserved by the packed-TANIMOTO kernel wrapper: 255 fills
+# padded data slots, 254 padded query slots (distinct so pads never collide).
+PACKED_BUCKET_PAD_DATA = 255
+PACKED_BUCKET_PAD_QUERY = 254
+PACKED_BUCKET_MAX = 253
+
+
+def packed_words(v: int) -> int:
+    """Words per packed sign row for a logical dimensionality of v."""
+    return -(-int(v) // WORD_BITS)
+
+
+def _pack_bits(bits: jnp.ndarray, tail_bit: bool) -> jnp.ndarray:
+    """bool [N, V] -> int32 words [N, ceil(V/32)] (little-endian bit order),
+    tail slots past V filled with `tail_bit`."""
+    n, v = bits.shape
+    w = packed_words(v)
+    pad = w * WORD_BITS - v
+    if pad:
+        bits = jnp.pad(bits, ((0, 0), (0, pad)), constant_values=tail_bit)
+    lanes = bits.reshape(n, w, WORD_BITS).astype(jnp.uint32)
+    weights = jnp.left_shift(jnp.uint32(1),
+                             jnp.arange(WORD_BITS, dtype=jnp.uint32))
+    words = jnp.sum(lanes * weights, axis=-1)          # uint32 [N, W]
+    # int32 storage (bit-identical reinterpret): signed words keep jnp.pad /
+    # Pallas block plumbing on the well-trodden int path
+    return jax.lax.bitcast_convert_type(words, jnp.int32)
+
+
+def pack_signs_data(sgn: jnp.ndarray) -> jnp.ndarray:
+    """Sign-quantized data {-1,+1} [N, V] -> packed int32 words [N, W];
+    tail bits 0 (they pair with query tail bits 1 -> always a disagreement)."""
+    return _pack_bits(jnp.asarray(sgn) > 0, tail_bit=False)
+
+
+def pack_signs_queries(sgn: jnp.ndarray) -> jnp.ndarray:
+    """Sign-quantized queries {-1,+1} [Q, V] -> packed int32 words [Q, W];
+    tail bits 1 (see pack_signs_data)."""
+    return _pack_bits(jnp.asarray(sgn) > 0, tail_bit=True)
+
+
+def unpack_signs(words: jnp.ndarray, v: int) -> jnp.ndarray:
+    """Packed int32 words [N, W] -> signs {-1,+1} int8 [N, v] (testing aid)."""
+    u = jax.lax.bitcast_convert_type(words, jnp.uint32)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (u[..., None] >> shifts) & jnp.uint32(1)     # [N, W, 32]
+    flat = bits.reshape(words.shape[0], -1)[:, :v]
+    return jnp.where(flat == 1, 1, -1).astype(jnp.int8)
+
+
+def packed_cosine_match(data_words: jnp.ndarray,
+                        query_words: jnp.ndarray) -> jnp.ndarray:
+    """counts[q, n] = 32*W - popcount(q_words ^ d_words): the pure-jnp
+    reference for the packed COSINE layout (kernels/packed_cosine.py is the
+    Pallas hot path).  Exact -- not an estimate -- versus match_cosine on
+    the unpacked signs."""
+    d = jnp.asarray(data_words, dtype=jnp.int32)
+    s = jnp.asarray(query_words, dtype=jnp.int32)
+    bits_total = WORD_BITS * d.shape[1]
+
+    def combine(dcc, scc):
+        x = jax.lax.population_count(scc[:, None, :] ^ dcc[None, :, :])
+        return jnp.sum(x, axis=-1)
+
+    # chunk-pad words are 0 on both sides -> xor 0 -> popcount 0: neutral
+    disagreements = _match._scan_chunks(
+        _match._pad_axis1(d, 8, 0), _match._pad_axis1(s, 8, 0), 8, combine)
+    return bits_total - disagreements
+
+
+def pack_buckets(sigs: jnp.ndarray) -> jnp.ndarray:
+    """Minhash bucket ids int [N, m] -> uint8 [N, m].
+
+    Raises ValueError when a bucket id falls outside [0, PACKED_BUCKET_MAX]
+    (254/255 are the kernel pad sentinels) -- the PACKED layout applies to
+    byte-sized rehash domains; keep WIDE (or rehash to <= 254 buckets) above
+    that.
+    """
+    arr = jnp.asarray(sigs)
+    lo, hi = int(arr.min()), int(arr.max())
+    if lo < 0 or hi > PACKED_BUCKET_MAX:
+        raise ValueError(
+            f"PACKED TANIMOTO signatures must lie in [0, {PACKED_BUCKET_MAX}] "
+            f"(254/255 are pad sentinels); got values in [{lo}, {hi}] -- "
+            f"use SignatureLayout.WIDE or rehash to <= {PACKED_BUCKET_MAX + 1} "
+            f"buckets"
+        )
+    return arr.astype(jnp.uint8)
+
+
+def packed_tanimoto_match(data_u8: jnp.ndarray,
+                          query_u8: jnp.ndarray) -> jnp.ndarray:
+    """Byte-lane collision count: the pure-jnp reference for the packed
+    TANIMOTO layout (identical counts to match_tanimoto on the int32 ids)."""
+    return _match.match_eq(data_u8.astype(jnp.int32),
+                           query_u8.astype(jnp.int32))
+
+
+def packed_bytes_cosine(wide: jnp.ndarray) -> int:
+    """Packed footprint of a WIDE sign matrix [N, V]: ceil(V/32) words/row."""
+    return int(wide.shape[0]) * packed_words(int(wide.shape[1])) * 4
+
+
+def packed_bytes_tanimoto(wide: jnp.ndarray) -> int:
+    """Packed footprint of a WIDE sketch matrix [N, m]: one byte per slot."""
+    return int(wide.shape[0]) * int(wide.shape[1])

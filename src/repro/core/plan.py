@@ -56,7 +56,8 @@ from repro.core import cpq as _cpq
 from repro.core import engines as _engines
 from repro.core import merge as _merge
 from repro.core.select import select_topk
-from repro.core.types import Engine, SearchParams, TopKMethod, TopKResult
+from repro.core.types import (Engine, SearchParams, SignatureLayout,
+                              TopKMethod, TopKResult)
 
 # jax >= 0.6 promotes shard_map to the top level (keyword `check_vma`);
 # earlier releases keep it in jax.experimental (keyword `check_rep`).
@@ -101,6 +102,12 @@ class QueryPlan:
     host_loop: bool = False            # MULTILOAD: host streaming vs lax.scan
     hierarchical: bool = False         # DISTRIBUTED: pod-local merge first
     mesh_axes: tuple[str, ...] = ()    # DISTRIBUTED: mesh axis names
+    # signature storage format the match fn expects (core/packing.py); part
+    # of the plan hash, so WIDE and PACKED executables never collide in cache
+    signature_layout: SignatureLayout = SignatureLayout.WIDE
+    # fused match->count->local-top-k kernel fn(data, queries, k) ->
+    # (ids, counts) candidate buffers; None => count matrix + select_topk
+    fused_match: Optional[Callable[[jnp.ndarray, Any, int], tuple]] = None
 
     # -- derived layout facts ----------------------------------------------
     @property
@@ -150,6 +157,8 @@ class QueryPlan:
             hierarchical=self.hierarchical,
             mesh_axes=list(self.mesh_axes),
             fused_hist=self.fused_hist,
+            signature_layout=self.signature_layout.value,
+            fused_match=self.fused_match is not None,
         )
 
 
@@ -168,6 +177,7 @@ def plan_search(
     host_loop: bool = False,
     hierarchical: bool = False,
     mesh_axes: Sequence[str] = (),
+    signature_layout: SignatureLayout | str = SignatureLayout.WIDE,
 ) -> QueryPlan:
     """The single planning entry point: resolve the engine, lay out the
     parts, fix the pad policy and merge strategy, return the QueryPlan.
@@ -180,13 +190,22 @@ def plan_search(
     `n_parts` with `n_objects` (an even split padded up to divisibility --
     the classic multiload partition).  DISTRIBUTED plans defer the shape to
     compile time (shard_map splits whatever data arrives).
+
+    `signature_layout` selects the storage format the data/queries arrive in
+    (core/packing.py): PACKED plans dispatch the packed match fns and -- on
+    the single-device kernel paths with nothing padded -- the fused
+    match->count->local-top-k kernel, so the [Q, N] count matrix never
+    leaves VMEM.  Engines without a packed format reject PACKED here.
     """
+    sig_layout = SignatureLayout(signature_layout)
     model: Optional[_engines.MatchModel] = None
     if callable(engine) and not isinstance(engine, (_engines.MatchModel, Engine, str)):
+        # raw callables own the layout contract; the plan just records it
         match = engine
     else:
         model = _engines.get(engine)
-        match = model.match_fn(use_kernel)
+        sig_layout = model.require_layout(sig_layout)
+        match = model.match_fn(use_kernel, sig_layout)
 
     layout = Layout(layout)
     if part_rows is None and n_parts is not None:
@@ -217,12 +236,25 @@ def plan_search(
     # scan / shard_map paths keep the jnp reference histogram (unchanged
     # behaviour of the four pre-planner copies).
     fused = use_kernel and layout in (Layout.MONOLITHIC, Layout.SEGMENTED)
+    # The fused match->count->local-top-k kernel replaces the whole
+    # count+select pipeline.  Same single-device gating as fused_hist, plus
+    # n_objects None: the kernel masks pad columns by *physical* row id, so
+    # engine-filled pad rows (multiload stacks, mesh divisibility) must not
+    # be present -- those layouts keep the packed count kernel + the
+    # structural _mask_pad_counts instead.
+    fused_topk = None
+    if (model is not None and sig_layout is SignatureLayout.PACKED
+            and use_kernel and n_objects is None
+            and layout in (Layout.MONOLITHIC, Layout.SEGMENTED)):
+        fused_topk = model.packed_fused_topk
     return QueryPlan(
         match=match, params=params, layout=layout, part_rows=rows,
         n_objects=n_objects, engine=model.engine if model else None,
-        pad_value=model.pad_value if model else None, fused_hist=fused,
+        pad_value=model.pad_value_for(sig_layout) if model else None,
+        fused_hist=fused,
         host_loop=bool(host_loop) and layout == Layout.MULTILOAD,
         hierarchical=bool(hierarchical), mesh_axes=tuple(mesh_axes),
+        signature_layout=sig_layout, fused_match=fused_topk,
     )
 
 
@@ -359,7 +391,34 @@ def _part_topk(plan: QueryPlan, data: jnp.ndarray, queries: Any, offset,
     return _mask_invalid(gids, local.counts, plan.n_objects)
 
 
+def _fused_candidates_topk(fused_match, data, queries, k: int):
+    """Run a fused match->count->local-top-k kernel and reduce its per-tile
+    candidate buffers to the final (ids, counts) [Q, k].
+
+    Per-tile buffers arrive in (count desc, id asc) order with tiles in
+    ascending global-id ranges, so the buffer as a whole is id-ascending
+    within equal counts -- exactly what topk_from_candidates' stable merge
+    needs for the global tie-break."""
+    cids, ccnt = fused_match(data, queries, k)
+    if cids.shape[1] < k:  # tiny corpus: fewer candidate slots than k
+        fill = jnp.full((cids.shape[0], k - cids.shape[1]), -1, jnp.int32)
+        cids = jnp.concatenate([cids, fill], axis=1)
+        ccnt = jnp.concatenate([ccnt, fill], axis=1)
+    return _cpq.topk_from_candidates(cids, ccnt, k)
+
+
 def _build_monolithic(plan: QueryPlan, key):
+    if plan.fused_match is not None:
+        k = plan.params.k
+
+        def run_fused(data: jnp.ndarray, queries: Any) -> TopKResult:
+            _note_trace(key)
+            ids, counts = _fused_candidates_topk(plan.fused_match, data,
+                                                 queries, k)
+            return TopKResult(ids=ids, counts=counts, threshold=counts[:, -1])
+
+        return jax.jit(run_fused)
+
     def run(data: jnp.ndarray, queries: Any) -> TopKResult:
         _note_trace(key)
         counts = _mask_pad_counts(plan.match(data, queries), 0, plan.n_objects)
@@ -401,7 +460,7 @@ def _part_key(plan: QueryPlan, rows: int) -> tuple:
     part_rows / n_objects) keeps reusing kernels compiled for the same part
     shape (the id offset and pad boundary are traced scalars)."""
     params = dataclasses.replace(plan.params, k=plan.part_k(rows))
-    return ("part", plan.match, params, plan.fused_hist,
+    return ("part", plan.match, params, plan.fused_hist, plan.fused_match,
             plan.n_objects is not None, rows)
 
 
@@ -411,12 +470,20 @@ def _part_fn(plan: QueryPlan, rows: int):
     corpus growth, so a 40-segment corpus of equal seals compiles once."""
     key = _part_key(plan, rows)
     match, fused = plan.match, plan.fused_hist
+    fused_match = plan.fused_match
     params = dataclasses.replace(plan.params, k=plan.part_k(rows))
     masked = plan.n_objects is not None
 
     def build():
         def run(part, queries, offset, n_limit):
             _note_trace(key)
+            if fused_match is not None:
+                # fused plans are never masked (plan_search gates on
+                # n_objects None): the kernel's own physical-row masking is
+                # exhaustive, and parts arrive unpadded
+                ids, cnts = _fused_candidates_topk(fused_match, part,
+                                                   queries, params.k)
+                return jnp.where(ids >= 0, ids + offset, -1), cnts
             counts = match(part, queries)
             if masked:
                 counts = _mask_pad_counts(counts, offset, n_limit)

@@ -42,7 +42,8 @@ import jax.numpy as jnp
 from repro.core import engines as _engines
 from repro.core import plan as _plan
 from repro.core.index import GenieIndex
-from repro.core.types import Engine, IndexStats, TopKMethod, TopKResult
+from repro.core.types import (Engine, IndexStats, SignatureLayout,
+                              TopKMethod, TopKResult)
 
 
 def even_segments(n_objects: int, n_segments: int) -> list[int]:
@@ -81,6 +82,11 @@ class SegmentedIndex:
     segments: list[GenieIndex] = dataclasses.field(default_factory=list)
     compaction_count: int = 0
     compaction_seconds: float = 0.0
+    # storage format every segment is sealed into (core/packing.py)
+    signature_layout: SignatureLayout = SignatureLayout.WIDE
+
+    def __post_init__(self):
+        self.signature_layout = self.model.require_layout(self.signature_layout)
 
     # ------------------------------------------------------------------
     @property
@@ -109,6 +115,9 @@ class SegmentedIndex:
             max_list_len=max((s.stats.max_list_len for s in segs), default=0),
             bytes_device=sum(s.stats.bytes_device for s in segs),
             build_seconds=sum(s.stats.build_seconds for s in segs),
+            signature_layout=self.signature_layout.value,
+            bytes_signatures_wide=sum(s.stats.bytes_signatures_wide for s in segs),
+            bytes_signatures_packed=sum(s.stats.bytes_signatures_packed for s in segs),
             n_segments=len(segs),
             segment_rows=self.segment_rows,
             segment_build_seconds=[s.stats.build_seconds for s in segs],
@@ -130,7 +139,8 @@ class SegmentedIndex:
             # an empty segment would poison every later search (0-row match)
             raise ValueError(f"cannot add an empty batch (shape {shape})")
         seg = GenieIndex.build(self.engine, raw_data, max_count=self.max_count,
-                               use_kernel=self.use_kernel)
+                               use_kernel=self.use_kernel,
+                               signature_layout=self.signature_layout)
         if self.segments:
             want = self.segments[0].data.shape[1:]
             if seg.data.shape[1:] != want:
@@ -154,9 +164,11 @@ class SegmentedIndex:
             self.engine, k, self.max_count, layout=_plan.Layout.SEGMENTED,
             part_rows=tuple(self.segment_rows), method=method,
             candidate_cap=candidate_cap, use_kernel=self.use_kernel,
+            signature_layout=self.signature_layout,
         )
-        return _plan.execute(plan, [s.data for s in self.segments],
-                             self.model.prepare_queries(queries))
+        return _plan.execute(
+            plan, [s.data for s in self.segments],
+            self.model.prepare_queries_for(queries, self.signature_layout))
 
     def search_multiload(self, queries, k: int,
                          method: TopKMethod = TopKMethod.CPQ) -> TopKResult:
@@ -169,9 +181,11 @@ class SegmentedIndex:
             self.engine, k, self.max_count, layout=_plan.Layout.MULTILOAD,
             part_rows=tuple(self.segment_rows), n_objects=self.n_objects,
             method=method, use_kernel=self.use_kernel, host_loop=True,
+            signature_layout=self.signature_layout,
         )
-        return _plan.execute(plan, [s.data for s in self.segments],
-                             self.model.prepare_queries(queries))
+        return _plan.execute(
+            plan, [s.data for s in self.segments],
+            self.model.prepare_queries_for(queries, self.signature_layout))
 
     # ------------------------------------------------------------------
     # Compaction
@@ -184,24 +198,39 @@ class SegmentedIndex:
             raise ValueError(f"max_segments must be >= 1, got {max_segments}")
         if len(self.segments) <= max_segments:
             return
-        model = self.model
         segs = list(self.segments)
         t_total = 0.0
         while len(segs) > max_segments:
             sizes = [s.stats.n_objects for s in segs]
             i = min(range(len(segs) - 1), key=lambda j: sizes[j] + sizes[j + 1])
             t0 = time.time()
+            a, b = segs[i].stats, segs[i + 1].stats
             arr = jnp.concatenate([segs[i].data, segs[i + 1].data], axis=0)
-            stats = model.build_stats(arr)
             jax.block_until_ready(arr)
             t_total += time.time() - t0
-            # the merged segment keeps its sources' *build* time; the concat
-            # cost is compaction accounting, not build accounting
-            stats.build_seconds = (segs[i].stats.build_seconds
-                                   + segs[i + 1].stats.build_seconds)
+            # aggregate the sources' stats instead of recomputing on `arr`:
+            # every field is additive (or a max), and a PACKED `arr` holds
+            # words/bytes -- build_stats would misread its width as signature
+            # slots.  The merged segment keeps its sources' *build* time; the
+            # concat cost is compaction accounting, not build accounting.
+            stats = IndexStats(
+                n_objects=a.n_objects + b.n_objects,
+                n_lists=a.n_lists,
+                total_postings=a.total_postings + b.total_postings,
+                max_list_len=max(a.max_list_len, b.max_list_len),
+                bytes_device=a.bytes_device + b.bytes_device,
+                build_seconds=a.build_seconds + b.build_seconds,
+                signature_layout=self.signature_layout.value,
+                bytes_signatures_wide=(a.bytes_signatures_wide
+                                       + b.bytes_signatures_wide),
+                bytes_signatures_packed=(a.bytes_signatures_packed
+                                         + b.bytes_signatures_packed),
+                extra={"engine": self.engine.value},
+            )
             segs[i:i + 2] = [GenieIndex(engine=self.engine, max_count=self.max_count,
                                         data=arr, stats=stats,
-                                        use_kernel=self.use_kernel)]
+                                        use_kernel=self.use_kernel,
+                                        signature_layout=self.signature_layout)]
         self.segments = segs
         self.compaction_count += 1
         self.compaction_seconds += t_total
@@ -218,4 +247,5 @@ class SegmentedIndex:
         if not self.segments:
             raise ValueError("empty SegmentedIndex: add() first")
         data = jnp.concatenate([s.data for s in self.segments], axis=0)
-        return _plan.pad_to_multiple(data, pad_multiple, self.model.pad_value)
+        return _plan.pad_to_multiple(
+            data, pad_multiple, self.model.pad_value_for(self.signature_layout))

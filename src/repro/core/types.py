@@ -35,6 +35,23 @@ class TopKMethod(str, enum.Enum):
     SORT = "sort"        # baseline: full lax.top_k (sort-based)
 
 
+class SignatureLayout(str, enum.Enum):
+    """Device-resident signature storage format (core/packing.py).
+
+    WIDE    -- one signature slot per array element (the historical layout:
+               int8 +-1 signs for COSINE, int32 bucket ids for TANIMOTO).
+    PACKED  -- bit/byte-packed: COSINE signs become uint32-word bitfields
+               matched by XOR+popcount (FLASH, Wang et al. 1709.01190),
+               TANIMOTO bucket ids narrow to one byte matched by byte
+               compare.  Counts are bit-for-bit identical to WIDE; only the
+               bytes moved per object shrink (4-8x).  Engines without a
+               packed format reject PACKED plans at build/plan time.
+    """
+
+    WIDE = "wide"
+    PACKED = "packed"
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class TopKResult:
@@ -85,6 +102,12 @@ class IndexStats:
     max_list_len: int = 0
     bytes_device: int = 0
     build_seconds: float = 0.0
+    # signature storage accounting: bytes the corpus occupies under each
+    # layout (bytes_device equals whichever layout is actually resident;
+    # bytes_signatures_packed is 0 for engines without a packed format)
+    signature_layout: str = SignatureLayout.WIDE.value
+    bytes_signatures_wide: int = 0
+    bytes_signatures_packed: int = 0
     # per-segment build/compaction accounting (core/segments.py)
     n_segments: int = 1
     segment_rows: list[int] = dataclasses.field(default_factory=list)

@@ -18,6 +18,8 @@ from repro.kernels import cpq_hist as _cpq_hist
 from repro.kernels import ip_count as _ip
 from repro.kernels import match_count as _mc
 from repro.kernels import minsum_count as _ms
+from repro.kernels import packed_cosine as _pcos
+from repro.kernels import packed_tanimoto as _ptan
 from repro.kernels import range_count as _rc
 from repro.kernels import tanimoto_count as _tc
 
@@ -163,8 +165,8 @@ def cosine_count(
 ) -> jnp.ndarray:
     """COSINE engine kernel: sign-agreement counts int32 [Q, N].
 
-    Inputs are +-1 sign vectors (exact for counts < 2^24); zero V-padding is
-    dot-neutral and the kernel shifts by the logical V.
+    Inputs are +-1 sign vectors; zero V-padding is dot-neutral and the kernel
+    shifts by the logical V.  The kernel accumulates int32 (exact at any V).
     """
     qn, v = query_sgn.shape
     nn = data_sgn.shape[0]
@@ -176,7 +178,119 @@ def cosine_count(
         d, q, v_logical=v, tile_q=tq, tile_n=tn, tile_v=tv,
         interpret=common.use_interpret(interpret)
     )
-    return out[:qn, :nn].astype(jnp.int32)
+    return out[:qn, :nn]
+
+
+# uint8 pad sentinels for packed TANIMOTO (buckets are capped at 253 by
+# core/packing.py, so 254/255 can never collide with a real signature slot).
+_PAD_DATA_U8 = 255
+_PAD_QUERY_U8 = 254
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_n", "interpret"))
+def packed_cosine_count(
+    data_words: jnp.ndarray,
+    query_words: jnp.ndarray,
+    *,
+    tile_q: int | None = None,
+    tile_n: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Packed COSINE kernel: XOR+popcount agreement counts int32 [Q, N].
+
+    Inputs are int32 word matrices from core/packing.py (query tail bits 1,
+    data tail bits 0).  Pad rows are all-zero words -- their counts are
+    garbage but sliced away; word-axis alignment is not needed because the
+    kernel chunks the packed width in VMEM.
+    """
+    qn, w = query_words.shape
+    nn = data_words.shape[0]
+    tq, tn = _tiles(qn, nn, tile_q or _pcos.TILE_Q, tile_n or _pcos.TILE_N)
+    q = common.pad_to(query_words.astype(jnp.int32), tq, 0, 0)
+    d = common.pad_to(data_words.astype(jnp.int32), tn, 0, 0)
+    out = _pcos.packed_cosine_count_pallas(
+        d, q, bits_total=32 * w, tile_q=tq, tile_n=tn,
+        interpret=common.use_interpret(interpret)
+    )
+    return out[:qn, :nn]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_q", "tile_n", "interpret"))
+def packed_cosine_topk(
+    data_words: jnp.ndarray,
+    query_words: jnp.ndarray,
+    *,
+    k: int,
+    tile_q: int | None = None,
+    tile_n: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused packed COSINE match->count->local-top-k.
+
+    Returns (ids, counts) int32 [Q, n_tiles * min(k, tile_n)] candidate
+    buffers in per-tile (count desc, id asc) order; ids are global object
+    ids, pads are id -1 / count -1.  Data pad rows are masked in-kernel by
+    global id, so they can never enter a tile's candidate list.
+    """
+    qn, w = query_words.shape
+    nn = data_words.shape[0]
+    tq, tn = _tiles(qn, nn, tile_q or _pcos.TILE_Q, tile_n or _pcos.TILE_N)
+    q = common.pad_to(query_words.astype(jnp.int32), tq, 0, 0)
+    d = common.pad_to(data_words.astype(jnp.int32), tn, 0, 0)
+    ids, cnts = _pcos.packed_cosine_topk_pallas(
+        d, q, bits_total=32 * w, n_logical=nn, k=k, tile_q=tq, tile_n=tn,
+        interpret=common.use_interpret(interpret)
+    )
+    return ids[:qn], cnts[:qn]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_n", "tile_m", "interpret"))
+def packed_tanimoto_count(
+    data_u8: jnp.ndarray,
+    query_u8: jnp.ndarray,
+    *,
+    tile_q: int | None = None,
+    tile_n: int | None = None,
+    tile_m: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Packed TANIMOTO kernel: byte-lane collision counts int32 [Q, N]."""
+    qn, m = query_u8.shape
+    nn = data_u8.shape[0]
+    tq, tn = _tiles(qn, nn, tile_q or _ptan.TILE_Q, tile_n or _ptan.TILE_N)
+    tm = common.pick_tile(m, tile_m or _ptan.TILE_M, 128)
+    q = common.pad_to(common.pad_to(query_u8.astype(jnp.uint8), tq, 0, _PAD_QUERY_U8),
+                      tm, 1, _PAD_QUERY_U8)
+    d = common.pad_to(common.pad_to(data_u8.astype(jnp.uint8), tn, 0, _PAD_DATA_U8),
+                      tm, 1, _PAD_DATA_U8)
+    out = _ptan.packed_tanimoto_count_pallas(
+        d, q, tile_q=tq, tile_n=tn, tile_m=tm, interpret=common.use_interpret(interpret)
+    )
+    return out[:qn, :nn]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_q", "tile_n", "interpret"))
+def packed_tanimoto_topk(
+    data_u8: jnp.ndarray,
+    query_u8: jnp.ndarray,
+    *,
+    k: int,
+    tile_q: int | None = None,
+    tile_n: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused packed TANIMOTO match->count->local-top-k (see
+    packed_cosine_topk for the candidate-buffer contract)."""
+    qn, m = query_u8.shape
+    nn = data_u8.shape[0]
+    tq, tn = _tiles(qn, nn, tile_q or _ptan.TILE_Q, tile_n or _ptan.TILE_N)
+    q = common.pad_to(query_u8.astype(jnp.uint8), tq, 0, _PAD_QUERY_U8)
+    d = common.pad_to(data_u8.astype(jnp.uint8), tn, 0, _PAD_DATA_U8)
+    ids, cnts = _ptan.packed_tanimoto_topk_pallas(
+        d, q, n_logical=nn, k=k, tile_q=tq, tile_n=tn,
+        interpret=common.use_interpret(interpret)
+    )
+    return ids[:qn], cnts[:qn]
 
 
 @functools.partial(jax.jit, static_argnames=("max_count", "tile_q", "tile_n", "interpret"))

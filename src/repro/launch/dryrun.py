@@ -373,12 +373,33 @@ def run_genie_cell(dataset: str, mesh_kind: str) -> dict:
     from repro.core import segments as seg_lib
 
     ingest_rows = seg_lib.even_segments(ds.n_objects, 16)
+    compacted_rows = [sum(ingest_rows[i:i + 2]) for i in range(0, len(ingest_rows), 2)]
     rep["segmented"] = dict(
         pad_rows=int(n - ds.n_objects),
         ingest=seg_lib.layout_accounting(ingest_rows, width * sig_bytes),
-        compacted=seg_lib.layout_accounting(
-            [sum(ingest_rows[i:i + 2]) for i in range(0, len(ingest_rows), 2)],
-            width * sig_bytes),
+        compacted=seg_lib.layout_accounting(compacted_rows, width * sig_bytes),
+    )
+    # signature-storage accounting (core/packing.py): wide vs PACKED bytes
+    # per object, and the per-segment layouts a PACKED seal would produce.
+    # The paper's five datasets serve WIDE-only engines (eq/minsum/ip/range
+    # have no packed format), so packed reports None here; simhash/minhash
+    # services (COSINE/TANIMOTO) shrink by the ratio gated in
+    # benchmarks/roofline.py.
+    from repro.core import engines as engines_lib
+
+    model = engines_lib.get(ds.engine)
+    packed_row_bytes = None
+    if model.supports_packed:
+        row_sds = jax.ShapeDtypeStruct((1, width), jnp.int32)
+        packed_row_bytes = int(model.packed_bytes(row_sds))
+    rep["segmented"]["signatures"] = dict(
+        packed_supported=model.supports_packed,
+        bytes_per_object_wide=int(width * sig_bytes),
+        bytes_per_object_packed=packed_row_bytes,
+        ingest_packed=(seg_lib.layout_accounting(ingest_rows, packed_row_bytes)
+                       if packed_row_bytes else None),
+        compacted_packed=(seg_lib.layout_accounting(compacted_rows, packed_row_bytes)
+                          if packed_row_bytes else None),
     )
     return rep
 

@@ -45,6 +45,7 @@ from repro.core import engines as engines_lib
 from repro.core import lsh as lsh_lib
 from repro.core import plan as plan_lib
 from repro.core.lsh import tau_ann
+from repro.core.types import SignatureLayout
 
 
 @dataclasses.dataclass
@@ -60,12 +61,22 @@ class RetrievalService:
     m_override: Optional[int] = None
     max_segments: int = 16                         # compaction trigger for add()
     mesh: Optional[jax.sharding.Mesh] = None       # serve sharded when set
+    # signature storage for the sealed segments (core/packing.py): PACKED
+    # bit/byte-packs each segment at seal time for engines with a packed
+    # format (simhash -> COSINE sign words; minhash -> TANIMOTO uint8 buckets
+    # when n_buckets <= 254).  Results are identical to WIDE; only the device
+    # footprint and match-phase HBM traffic shrink.
+    signature_layout: SignatureLayout | str = SignatureLayout.WIDE
 
     def __post_init__(self):
         self.m = self.m_override or tau_ann.required_m(self.eps, self.delta)
         if self.max_segments < 1:
             raise ValueError(f"max_segments must be >= 1, got {self.max_segments}")
         self._scheme = lsh_lib.get_scheme(self.scheme)
+        # fail at construction, not at the first add(): WIDE-only engines
+        # (e2lsh/rbh -> EQ) reject PACKED here
+        self.signature_layout = engines_lib.get(
+            self._scheme.engine).require_layout(self.signature_layout)
         self._params = None
         self._dim: Optional[int] = None
         self._index: Optional[SegmentedIndex] = None
@@ -111,7 +122,8 @@ class RetrievalService:
             self._params = self._make_params(self._dim)
         if self._index is None:
             self._index = SegmentedIndex(engine=self._scheme.engine,
-                                         max_count=self.m)
+                                         max_count=self.m,
+                                         signature_layout=self.signature_layout)
         self._index.add(self._hash(emb))
         self._items.extend(items)
         if len(self._index.segments) > self.max_segments:
@@ -166,8 +178,10 @@ class RetrievalService:
                 layout=plan_lib.Layout.DISTRIBUTED, n_objects=n, method=method,
                 use_kernel=self._index.use_kernel,
                 mesh_axes=tuple(self.mesh.axis_names),
+                signature_layout=self.signature_layout,
             )
-            canonical = engines_lib.get(self._scheme.engine).prepare_queries(qsigs)
+            canonical = engines_lib.get(self._scheme.engine).prepare_queries_for(
+                qsigs, self.signature_layout)
             qq = jax.device_put(canonical, distributed.replicated(self.mesh, 2))
             res = plan_lib.execute(plan, data, qq, mesh=self.mesh)
         # scheme-paired MLE: c/m for bucketed families (Eqn 7), the simhash

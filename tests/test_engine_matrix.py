@@ -155,6 +155,61 @@ def test_matrix_pad_value_representable(engine):
 
 
 # ---------------------------------------------------------------------------
+# PACKED signature layout (core/packing.py): bit-for-bit parity with WIDE
+# ---------------------------------------------------------------------------
+
+PACKED_ENGINES = [e for e in MATRIX_ENGINES if engines.get(e).supports_packed]
+WIDE_ONLY_ENGINES = [e for e in MATRIX_ENGINES if not engines.get(e).supports_packed]
+
+
+def test_matrix_packed_covers_expected_engines():
+    assert set(PACKED_ENGINES) == {Engine.TANIMOTO, Engine.COSINE}
+
+
+@pytest.mark.parametrize("engine", PACKED_ENGINES)
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("method", [TopKMethod.CPQ, TopKMethod.SPQ, TopKMethod.SORT])
+def test_matrix_packed_wide_parity(engine, use_kernel, method):
+    """PACKED search returns bit-for-bit the WIDE ids and counts for every
+    selection method and both match paths (use_kernel=True with PACKED takes
+    the fused match->count->local-top-k kernel)."""
+    model, data, queries, mc = _example(engine, n=97)   # V=32 words + ragged n
+    wide = GenieIndex.build(engine, data, max_count=mc, use_kernel=use_kernel)
+    packed = GenieIndex.build(engine, data, max_count=mc, use_kernel=use_kernel,
+                              signature_layout="packed")
+    want = wide.search(queries, k=9, method=method)
+    got = packed.search(queries, k=9, method=method)
+    _assert_same_topk(got, want,
+                      f"{engine.value} kernel={use_kernel} {method.value}")
+
+
+@pytest.mark.parametrize("engine", PACKED_ENGINES)
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_matrix_packed_pad_rows_never_reach_topk(engine, use_kernel):
+    """The packed multiload fill (0 words / 255 bytes) can never enter the
+    top-k -- same contract as the WIDE pad sweep above."""
+    n = 50
+    model, data, queries, mc = _example(engine, n=n)
+    idx = GenieIndex.build(engine, data, max_count=mc, use_kernel=use_kernel,
+                           signature_layout="packed")
+    res = idx.search_multiload(queries, k=10, n_parts=8)
+    ids = np.asarray(res.ids)
+    counts = np.asarray(res.counts)
+    assert ids.max() < n, f"{engine.value}: pad id {ids.max()} in top-k"
+    assert np.all(counts[ids < 0] == -1)
+    full = idx.search(queries, k=10)
+    _assert_same_topk(res, full, engine.value)
+
+
+@pytest.mark.parametrize("engine", WIDE_ONLY_ENGINES)
+def test_matrix_packed_rejects_unsupported_engines(engine):
+    """Engines without a packed format fail loudly at build, not at search."""
+    model, data, _, mc = _example(engine, n=8)
+    with pytest.raises(ValueError, match="no packed signature format"):
+        GenieIndex.build(engine, data, max_count=mc, signature_layout="packed")
+
+
+# ---------------------------------------------------------------------------
 # Tie-break consistency across selection methods
 # ---------------------------------------------------------------------------
 

@@ -262,6 +262,127 @@ def test_pad_and_stack_fills_with_engine_pad():
 
 
 # ---------------------------------------------------------------------------
+# PACKED signature layout: layout parity, plan-cache keying, describe()
+# ---------------------------------------------------------------------------
+
+PACKED_ENGINES = [e for e in ALL_ENGINES if engines.get(e).supports_packed]
+
+
+@pytest.mark.parametrize("engine", PACKED_ENGINES)
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_planner_packed_layout_parity(engine, method):
+    """Every single-process layout under signature_layout=PACKED reproduces
+    the WIDE sort oracle's ids and counts exactly, for both match paths
+    (use_kernel=True is the fused match->count->local-top-k kernel on the
+    MONOLITHIC/SEGMENTED layouts)."""
+    k = 9
+    model, raw, data, queries, mc = _case(engine)
+    oracle = cpq.sort_select(
+        model.reference(data, model.prepare_queries(queries)),
+        SearchParams(k=k, max_count=mc),
+    )
+    for use_kernel in (False, True):
+        idx = GenieIndex.build(engine, raw, max_count=mc, use_kernel=use_kernel,
+                               signature_layout="packed")
+        seg = SegmentedIndex(engine=engine, max_count=mc, use_kernel=use_kernel,
+                             signature_layout=plan_lib.SignatureLayout.PACKED)
+        for a, b in zip(CUTS, CUTS[1:]):
+            seg.add(raw[a:b])
+        seg.compact(max_segments=2)            # packed segments concat cleanly
+        results = {
+            "monolithic": idx.search(queries, k=k, method=method),
+            "segmented": seg.search(queries, k=k, method=method),
+            "multiload-scan": idx.search_multiload(queries, k=k, n_parts=4,
+                                                   method=method),
+            "multiload-host": seg.search_multiload(queries, k=k, method=method),
+        }
+        for layout, got in results.items():
+            _assert_same(got, oracle,
+                         f"{engine.value} {method.value} {layout} packed "
+                         f"kernel={use_kernel}")
+
+
+def test_packed_plans_cache_separately_from_wide():
+    """WIDE and PACKED plans for the same layout shape are distinct cache
+    keys (their executables consume different array formats), and the fused
+    kernel only rides the layouts whose rows are physical object ids."""
+    mk = lambda layout_name, **kw: plan_lib.plan_search(
+        Engine.COSINE, 5, 32, layout=plan_lib.Layout[layout_name],
+        use_kernel=True, **kw)
+    wide = mk("MONOLITHIC", part_rows=(64,))
+    packed = mk("MONOLITHIC", part_rows=(64,), signature_layout="packed")
+    assert wide != packed
+    assert hash(wide) != hash(packed)
+    assert wide.describe()["signature_layout"] == "wide"
+    assert packed.describe()["signature_layout"] == "packed"
+    assert not wide.describe()["fused_match"]
+    assert packed.describe()["fused_match"]
+
+    seg = mk("SEGMENTED", part_rows=(40, 24), signature_layout="packed")
+    assert seg.describe()["fused_match"]
+    # engine-filled pad rows (multiload stacks, mesh divisibility) are masked
+    # by count, which the fused kernel cannot see -> no fusion there
+    ml = mk("MULTILOAD", n_parts=4, n_objects=101, signature_layout="packed")
+    assert not ml.describe()["fused_match"]
+    dist = plan_lib.plan_search(
+        Engine.COSINE, 5, 32, layout=plan_lib.Layout.DISTRIBUTED,
+        n_objects=101, use_kernel=True, mesh_axes=("data",),
+        signature_layout="packed")
+    assert not dist.describe()["fused_match"]
+    # reference path (use_kernel=False) has no fused kernel either
+    ref = plan_lib.plan_search(
+        Engine.COSINE, 5, 32, part_rows=(64,), use_kernel=False,
+        signature_layout="packed")
+    assert not ref.describe()["fused_match"]
+
+
+def test_packed_plan_rejects_unsupported_engines():
+    with pytest.raises(ValueError, match="no packed signature format"):
+        plan_lib.plan_search(Engine.EQ, 5, 16, part_rows=(64,),
+                             signature_layout="packed")
+
+
+def test_retrieval_service_rejects_packed_for_wide_only_scheme():
+    """Schemes hashing to WIDE-only engines (e2lsh -> EQ) fail at service
+    construction, not at the first add()."""
+    from repro.serve.retrieval import RetrievalService
+
+    with pytest.raises(ValueError, match="no packed signature format"):
+        RetrievalService(embed_fn=lambda x: np.asarray(x), scheme="e2lsh",
+                         m_override=16, signature_layout="packed")
+
+
+def test_retrieval_service_packed_serving_parity(rng):
+    """simhash/minhash services sealed PACKED serve identical results to
+    WIDE, and index_stats reports the signature footprint win."""
+    from repro.serve.retrieval import RetrievalService
+
+    pts = rng.standard_normal((130, 16)).astype(np.float32)
+    for scheme in ("simhash", "minhash"):
+        svcs = {
+            # n_buckets=128: the packed TANIMOTO layout stores uint8 bucket
+            # ids, so the minhash rehash domain must be <= 253
+            layout: RetrievalService(embed_fn=lambda x: np.asarray(x),
+                                     scheme=scheme, m_override=96,
+                                     n_buckets=128, signature_layout=layout)
+            for layout in ("wide", "packed")
+        }
+        for svc in svcs.values():
+            for a, b in [(0, 30), (30, 37), (37, 90), (90, 130)]:
+                svc.add(list(range(a, b)), embeddings=pts[a:b])
+        q = pts[88:96] + 0.01
+        rw, sw = svcs["wide"].search(None, k=5, embeddings=q)
+        rp, sp = svcs["packed"].search(None, k=5, embeddings=q)
+        _assert_same(rp, rw, scheme)
+        assert np.allclose(sw, sp), scheme
+        stats = svcs["packed"].index_stats
+        assert stats.signature_layout == "packed"
+        assert 0 < stats.bytes_signatures_packed < stats.bytes_signatures_wide
+        assert stats.bytes_signatures_packed <= stats.bytes_signatures_wide / 4
+        assert svcs["wide"].index_stats.signature_layout == "wide"
+
+
+# ---------------------------------------------------------------------------
 # Distributed layout parity (subprocess: forced multi-device CPU)
 # ---------------------------------------------------------------------------
 
@@ -314,6 +435,58 @@ def test_planner_distributed_parity():
                          capture_output=True, text=True, env=env, timeout=900)
     assert out.returncode == 0, out.stderr[-4000:]
     assert "planner distributed parity OK" in out.stdout
+
+
+def test_planner_distributed_packed_parity():
+    """PACKED x {reference, kernel} through the sharded search step equals
+    the WIDE sort oracle: a packed segmented corpus exported by concat_data
+    (pad rows filled with the packed pad value, masked via n_objects) and
+    packed replicated queries, with the packed match running inside
+    shard_map on each shard's local words/bytes."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC
+    env.pop("JAX_PLATFORMS", None)
+    code = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import SegmentedIndex, cpq, distributed, engines
+        from repro.core.types import Engine, SearchParams, SignatureLayout
+        from repro.launch import mesh as mesh_lib
+
+        mesh = mesh_lib.make_mesh((2, 4), ('data', 'model'))
+        for eng in (Engine.COSINE, Engine.TANIMOTO):
+            model = engines.get(eng)
+            raw, rawq, mc = model.example(np.random.default_rng(0), 130, 4)
+            data = model.prepare_data(raw)
+            mx = model.resolve_max_count(data, mc)
+            want = cpq.sort_select(model.reference(data, model.prepare_queries(rawq)),
+                                   SearchParams(k=7, max_count=mx))
+            seg = SegmentedIndex(engine=eng, max_count=mx,
+                                 signature_layout=SignatureLayout.PACKED)
+            seg.add(raw[:40]); seg.add(raw[40:130])
+            pdata, n = seg.concat_data(pad_multiple=mesh.size)
+            assert pdata.shape[0] == 136 and n == 130
+            dd = jax.device_put(pdata, distributed.data_sharding(mesh))
+            qq = jax.device_put(
+                model.prepare_queries_for(rawq, SignatureLayout.PACKED),
+                distributed.replicated(mesh, 2))
+            for use_kernel in (False, True):
+                params = SearchParams(k=7, max_count=mx, use_kernel=use_kernel)
+                step = distributed.make_search_step(
+                    mesh, params, eng, n_objects=n,
+                    signature_layout=SignatureLayout.PACKED)
+                res = step(dd, qq)
+                label = (eng.value, use_kernel)
+                assert np.array_equal(np.asarray(res.ids),
+                                      np.asarray(want.ids)), label
+                assert np.array_equal(np.asarray(res.counts),
+                                      np.asarray(want.counts)), label
+        print('distributed packed parity OK')
+    """)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "distributed packed parity OK" in out.stdout
 
 
 def test_retrieval_service_sharded_serving_parity():

@@ -39,4 +39,7 @@ PYTHONPATH=".:$PYTHONPATH" python benchmarks/bench_add_throughput.py
 
 echo "--- serve-latency micro-benchmark (BENCH JSON; cached vs uncached plan) ---"
 PYTHONPATH=".:$PYTHONPATH" python benchmarks/bench_serve_latency.py
+
+echo "--- signature-storage roofline (BENCH JSON; packed <= wide/4 gate) ---"
+PYTHONPATH=".:$PYTHONPATH" python benchmarks/roofline.py
 echo "CI smoke OK"

@@ -1,0 +1,133 @@
+"""Coarse-routing micro-benchmark: recall@k and segments-scanned ratio vs
+the full scan on a clustered corpus (core/routing.py).
+
+The corpus is the IVF-friendly regime the router is built for: each sealed
+segment is one cluster of sign-correlated vectors (COSINE engine), and query
+traffic is skewed onto a few clusters -- the serving pattern where a corpus
+scan is pure waste.  The benchmark drives `SegmentedIndex.search` in all
+three routing modes and reports
+
+    BENCH {"name": "routing", ...}
+
+with ROUTED's recall@k against the full scan, the fraction of segments the
+routed batch actually scanned (the union over the query batch -- the host
+loop runs the whole batch against every scanned part), ROUTED_VERIFIED's
+bit-for-bit parity, and p50 wall-times.  Gates (tools/ci.sh):
+
+  * ROUTED_VERIFIED == full scan exactly (ids, counts, thresholds);
+  * ROUTED scans < 50% of the segments at recall@k >= 0.95.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+
+
+def _recall(routed_ids: np.ndarray, full_ids: np.ndarray) -> float:
+    hits = sum(
+        len(set(r[r >= 0]) & set(f[f >= 0])) / max(len(set(f[f >= 0])), 1)
+        for r, f in zip(routed_ids, full_ids)
+    )
+    return hits / len(full_ids)
+
+
+def _p50_us(fn, repeats: int) -> float:
+    import jax
+
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = fn()
+        jax.block_until_ready((res.ids, res.counts))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def run(n_clusters: int = 12, per_cluster: int = 800, d: int = 64,
+        q_batch: int = 32, query_clusters: int = 4, k: int = 10,
+        nprobe: int = 1, noise: float = 0.1, repeats: int = 9) -> list[Row]:
+    from repro.core import Engine, SegmentedIndex
+    from repro.core import engines as engines_lib
+
+    rng = np.random.default_rng(5)
+    centers = rng.standard_normal((n_clusters, d)).astype(np.float32)
+    # one sealed segment per cluster: the seal-time summaries are the
+    # router's centroids/bounds, so segment boundaries ARE the coarse cells
+    seg = SegmentedIndex(Engine.COSINE, use_kernel=False)
+    for c in range(n_clusters):
+        pts = centers[c][None, :] + noise * rng.standard_normal(
+            (per_cluster, d)).astype(np.float32)
+        seg.add(pts)
+    # skewed traffic: queries drawn from a few clusters only -- the regime
+    # where batch-union routing genuinely skips most of the corpus
+    qc = rng.integers(0, query_clusters, q_batch)
+    q = (centers[qc] + noise * rng.standard_normal(
+        (q_batch, d)).astype(np.float32))
+
+    full = seg.search(q, k)
+    routed = seg.search(q, k, routing="routed", nprobe=nprobe)
+    verified = seg.search(q, k, routing="routed_verified", nprobe=nprobe)
+
+    parity = (np.array_equal(np.asarray(full.ids), np.asarray(verified.ids))
+              and np.array_equal(np.asarray(full.counts),
+                                 np.asarray(verified.counts))
+              and np.array_equal(np.asarray(full.threshold),
+                                 np.asarray(verified.threshold)))
+    recall = _recall(np.asarray(routed.ids), np.asarray(full.ids))
+    model = engines_lib.get(Engine.COSINE)
+    mask, _ = seg.router().select(model.prepare_queries(q), nprobe)
+    scanned_ratio = float(mask.sum()) / n_clusters
+
+    p50_full = _p50_us(lambda: seg.search(q, k), repeats)
+    p50_routed = _p50_us(
+        lambda: seg.search(q, k, routing="routed", nprobe=nprobe), repeats)
+
+    report = dict(
+        name="routing",
+        engine="cosine", n_objects=n_clusters * per_cluster,
+        n_segments=n_clusters, k=k, nprobe=nprobe, q_batch=q_batch,
+        query_clusters=query_clusters,
+        recall_at_k=round(recall, 4),
+        segments_scanned=int(mask.sum()),
+        segments_scanned_ratio=round(scanned_ratio, 4),
+        verified_parity=bool(parity),
+        p50_full_us=round(p50_full, 1),
+        p50_routed_us=round(p50_routed, 1),
+        speedup_routed=round(p50_full / max(p50_routed, 1e-9), 2),
+    )
+    print("BENCH " + json.dumps(report), flush=True)
+    _LAST_REPORT.update(report)
+    return [
+        Row("routing.full_scan_p50", p50_full,
+            f"segments={n_clusters}"),
+        Row("routing.routed_p50", p50_routed,
+            f"scanned={report['segments_scanned']}/{n_clusters}"
+            f";recall={report['recall_at_k']}"),
+    ]
+
+
+_LAST_REPORT: dict = {}
+
+
+def main() -> None:
+    for r in run():
+        print(r.csv())
+    if not _LAST_REPORT.get("verified_parity"):
+        raise SystemExit("ROUTED_VERIFIED != full scan: parity gate failed")
+    if _LAST_REPORT.get("recall_at_k", 0.0) < 0.95:
+        raise SystemExit(
+            f"ROUTED recall@k {_LAST_REPORT.get('recall_at_k')} < 0.95"
+        )
+    if _LAST_REPORT.get("segments_scanned_ratio", 1.0) >= 0.5:
+        raise SystemExit(
+            f"ROUTED scanned {_LAST_REPORT.get('segments_scanned_ratio')} "
+            f"of segments (>= 0.5): routing is not sub-linear"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core import engines as _engines
 from repro.core import plan as _plan
+from repro.core import routing as _routing
 from repro.core.types import (Engine, IndexStats, SignatureLayout,
                               TopKMethod, TopKResult)
 
@@ -43,6 +44,9 @@ class GenieIndex:
     # storage format of `data` (core/packing.py); PACKED indexes hold the
     # bit/byte-packed array and dispatch the packed match kernels
     signature_layout: SignatureLayout = SignatureLayout.WIDE
+    # routing summary over the *wide* prepared array (core/routing.py),
+    # computed at seal time; None for indexes assembled outside build()
+    summary: Optional[_routing.SegmentSummary] = None
 
     # ------------------------------------------------------------------
     # Builders
@@ -66,12 +70,15 @@ class GenieIndex:
         """
         model = _engines.get(engine)
         layout = model.require_layout(signature_layout)
-        t0 = time.time()
+        # perf_counter, not time(): a wall-clock (NTP) step must never record
+        # a negative build duration
+        t0 = time.perf_counter()
         arr = model.prepare_data(data)
-        # stats, postings, and the count bound all read the *logical* WIDE
-        # shape -- resolve them before packing (the packed array's width is
-        # words/bytes, not signature slots)
+        # stats, postings, the count bound, and the routing summary all read
+        # the *logical* WIDE shape -- resolve them before packing (the packed
+        # array's width is words/bytes, not signature slots)
         stats = model.build_stats(arr)
+        summary = _routing.summarize(model.engine, arr)
         max_count = model.resolve_max_count(arr, max_count)
         if layout is SignatureLayout.PACKED:
             arr = model.pack_data(arr)
@@ -80,10 +87,10 @@ class GenieIndex:
         # block: prepare_data dispatches async jnp ops; without this the
         # timer reports dispatch time, not build time
         jax.block_until_ready(arr)
-        stats.build_seconds = time.time() - t0
+        stats.build_seconds = time.perf_counter() - t0
         return cls(engine=model.engine, max_count=max_count,
                    data=arr, stats=stats, use_kernel=use_kernel,
-                   signature_layout=layout)
+                   signature_layout=layout, summary=summary)
 
     # Thin named aliases kept for API compatibility with existing callers.
     @classmethod
@@ -151,7 +158,8 @@ class GenieIndex:
         return _plan.execute(plan, self.data, self.prepare_queries(queries))
 
     def search_multiload(self, queries, k: int, n_parts: int,
-                         method: TopKMethod = TopKMethod.CPQ) -> TopKResult:
+                         method: TopKMethod = TopKMethod.CPQ,
+                         candidate_cap: int | None = None) -> TopKResult:
         """Paper section III-D: split this index into parts and stream them.
 
         Works for every registered engine: the planned layout pads parts with
@@ -161,7 +169,8 @@ class GenieIndex:
         plan = _plan.plan_search(
             self.engine, k, self.max_count, layout=_plan.Layout.MULTILOAD,
             n_parts=n_parts, n_objects=self.stats.n_objects, method=method,
-            use_kernel=self.use_kernel, signature_layout=self.signature_layout,
+            candidate_cap=candidate_cap, use_kernel=self.use_kernel,
+            signature_layout=self.signature_layout,
         )
         chunks = _plan.pad_and_stack(plan, self.data)
         return _plan.execute(plan, chunks, self.prepare_queries(queries))

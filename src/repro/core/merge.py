@@ -23,15 +23,6 @@ from repro.core import cpq as _cpq
 from repro.core.types import TopKResult
 
 
-def _offset_ids(ids: jnp.ndarray, part_sizes, axis_index=None) -> jnp.ndarray:
-    """Translate part-local object ids to global ids given per-part offsets."""
-    import numpy as np
-
-    offsets = np.concatenate([[0], np.cumsum(part_sizes)[:-1]]).astype(np.int32)
-    off = jnp.asarray(offsets)[:, None, None]
-    return jnp.where(ids >= 0, ids + off, ids)
-
-
 def merge_topk(ids: jnp.ndarray, counts: jnp.ndarray, k: int) -> TopKResult:
     """Merge per-part results.  ids/counts: int32 [S, Q, kp] (part-LOCAL top-k,
     ids already globalised) -> overall top-k [Q, k]."""

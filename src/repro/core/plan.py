@@ -50,11 +50,14 @@ from typing import Any, Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import cpq as _cpq
 from repro.core import engines as _engines
 from repro.core import merge as _merge
+from repro.core import routing as _routing
+from repro.core.routing import Routing
 from repro.core.select import select_topk
 from repro.core.types import (Engine, SearchParams, SignatureLayout,
                               TopKMethod, TopKResult)
@@ -108,6 +111,12 @@ class QueryPlan:
     # fused match->count->local-top-k kernel fn(data, queries, k) ->
     # (ids, counts) candidate buffers; None => count matrix + select_topk
     fused_match: Optional[Callable[[jnp.ndarray, Any, int], tuple]] = None
+    # coarse routing mode (core/routing.py): NONE scans every part; ROUTED /
+    # ROUTED_VERIFIED prune via a Router built from segment summaries.  Part
+    # of the plan hash, so routed and full-scan executables never collide.
+    routing: Routing = Routing.NONE
+    # probe width for ROUTED/ROUTED_VERIFIED; None = Router's sqrt(S) default
+    nprobe: Optional[int] = None
 
     # -- derived layout facts ----------------------------------------------
     @property
@@ -141,6 +150,10 @@ class QueryPlan:
     def describe(self) -> dict:
         """Host-side plan summary (surfaced by launch/dryrun cost reports)."""
         rows = list(self.part_rows)
+        # both per-part lists truncate identically: a "..." marker past 32
+        # parts, never a silent cut (the lists must stay row-aligned)
+        truncated = len(rows) > 32
+        part_k = [self.part_k(r) for r in rows[:32]]
         return dict(
             layout=self.layout.value,
             engine=self.engine.value if self.engine else "<callable>",
@@ -148,8 +161,8 @@ class QueryPlan:
             method=self.params.method.value,
             use_kernel=self.params.use_kernel,
             n_parts=self.n_parts,
-            part_rows=rows if len(rows) <= 32 else rows[:32] + ["..."],
-            part_k=[self.part_k(r) for r in rows[:32]],
+            part_rows=rows[:32] + ["..."] if truncated else rows,
+            part_k=part_k + ["..."] if truncated else part_k,
             n_objects=self.n_objects,
             pad_rows=self.pad_rows,
             merge=self.merge_strategy(),
@@ -159,6 +172,8 @@ class QueryPlan:
             fused_hist=self.fused_hist,
             signature_layout=self.signature_layout.value,
             fused_match=self.fused_match is not None,
+            routing=self.routing.value,
+            nprobe=self.nprobe,
         )
 
 
@@ -178,6 +193,8 @@ def plan_search(
     hierarchical: bool = False,
     mesh_axes: Sequence[str] = (),
     signature_layout: SignatureLayout | str = SignatureLayout.WIDE,
+    routing: Routing | str = Routing.NONE,
+    nprobe: Optional[int] = None,
 ) -> QueryPlan:
     """The single planning entry point: resolve the engine, lay out the
     parts, fix the pad policy and merge strategy, return the QueryPlan.
@@ -196,6 +213,14 @@ def plan_search(
     the single-device kernel paths with nothing padded -- the fused
     match->count->local-top-k kernel, so the [Q, N] count matrix never
     leaves VMEM.  Engines without a packed format reject PACKED here.
+
+    `routing` plans coarse segment/shard pruning (core/routing.py): ROUTED
+    and ROUTED_VERIFIED plans execute against a Router built from segment
+    summaries (`execute(..., router=...)`) and skip the parts/shards the
+    router rules out.  Routing prunes host-streamed parts or mesh shards, so
+    it requires a part-structured layout: SEGMENTED, MULTILOAD with
+    host_loop=True, or DISTRIBUTED -- the single-program scans (MONOLITHIC,
+    scanned MULTILOAD) have nothing to skip and reject it here.
     """
     sig_layout = SignatureLayout(signature_layout)
     model: Optional[_engines.MatchModel] = None
@@ -230,6 +255,26 @@ def plan_search(
             f"pass host_loop=True to stream ragged parts"
         )
 
+    routing = Routing(routing)
+    host_looped = bool(host_loop) and layout == Layout.MULTILOAD
+    if routing is not Routing.NONE:
+        routable = (layout == Layout.SEGMENTED or host_looped
+                    or layout == Layout.DISTRIBUTED)
+        if not routable:
+            raise ValueError(
+                f"routing={routing.value!r} prunes host-streamed parts or "
+                f"mesh shards; a {layout.value} plan"
+                f"{'' if host_loop or layout != Layout.MULTILOAD else ' (scanned)'}"
+                f" is one device program with nothing to skip -- use "
+                f"routing='none', or a SEGMENTED / MULTILOAD host_loop / "
+                f"DISTRIBUTED layout"
+            )
+        if nprobe is not None and int(nprobe) < 1:
+            raise ValueError(f"nprobe must be >= 1, got {nprobe}")
+        nprobe = None if nprobe is None else int(nprobe)
+    else:
+        nprobe = None  # keep full-scan plans' cache keys canonical
+
     params = SearchParams(k=k, max_count=max_count, method=method,
                           candidate_cap=candidate_cap, use_kernel=use_kernel)
     # The fused Pallas histogram runs on the single-device paths only; the
@@ -252,9 +297,10 @@ def plan_search(
         n_objects=n_objects, engine=model.engine if model else None,
         pad_value=model.pad_value_for(sig_layout) if model else None,
         fused_hist=fused,
-        host_loop=bool(host_loop) and layout == Layout.MULTILOAD,
+        host_loop=host_looped,
         hierarchical=bool(hierarchical), mesh_axes=tuple(mesh_axes),
         signature_layout=sig_layout, fused_match=fused_topk,
+        routing=routing, nprobe=nprobe,
     )
 
 
@@ -498,26 +544,88 @@ def _part_fn(plan: QueryPlan, rows: int):
     return _cached(key, build)
 
 
-def _run_host_parts(plan: QueryPlan, parts, queries) -> TopKResult:
-    """Host-orchestrated part streaming (SEGMENTED and MULTILOAD host_loop):
-    each part is swapped through the device, selected into a buffer of width
-    min(k, rows), and the ragged buffers merge exactly (parts partition the
-    object set and arrive in ascending global-id order)."""
-    if len(parts) != plan.n_parts:
-        raise ValueError(f"plan lays out {plan.n_parts} parts, got {len(parts)}")
+def _scan_host_parts(plan: QueryPlan, parts, queries,
+                     part_mask: Optional[np.ndarray] = None) -> TopKResult:
+    """One pass of the host loop over the (optionally masked) parts: each
+    scanned part is swapped through the device, selected into a buffer of
+    width min(k, rows), and the ragged buffers merge exactly.  Skipped parts
+    never touch the device -- their rows' global ids simply advance the
+    offset, so scanned parts keep their true id ranges."""
     n_limit = jnp.int32(plan.n_objects if plan.n_objects is not None else 0)
     buf_ids, buf_counts = [], []
     offset = 0
-    for part, rows in zip(parts, plan.part_rows):
+    for i, (part, rows) in enumerate(zip(parts, plan.part_rows)):
         if int(part.shape[0]) != rows:
             raise ValueError(f"part has {int(part.shape[0])} rows, plan says {rows}")
-        part = jax.device_put(part)
-        gids, gcnt = _part_fn(plan, rows)(part, queries, jnp.int32(offset),
-                                          n_limit)
-        buf_ids.append(gids)
-        buf_counts.append(gcnt)
+        if part_mask is None or part_mask[i]:
+            part = jax.device_put(part)
+            gids, gcnt = _part_fn(plan, rows)(part, queries, jnp.int32(offset),
+                                              n_limit)
+            buf_ids.append(gids)
+            buf_counts.append(gcnt)
         offset += rows
+    if not buf_ids:  # defensive: a router always selects >= 1 segment
+        q = jax.tree_util.tree_leaves(queries)[0].shape[0]
+        empty = jnp.full((q, plan.params.k), -1, dtype=jnp.int32)
+        return TopKResult(ids=empty, counts=empty, threshold=empty[:, -1])
     return _merge.merge_ragged(buf_ids, buf_counts, plan.params.k)
+
+
+def _route(plan: QueryPlan, router: Optional["_routing.Router"],
+           queries, route_queries) -> tuple[np.ndarray, np.ndarray]:
+    """Resolve the routed plan's (segment mask, upper bounds) on the host.
+
+    `route_queries` are the canonical WIDE queries the summaries were built
+    against; they default to the execution queries (correct whenever the
+    plan's signature_layout is WIDE)."""
+    if router is None:
+        raise ValueError(
+            f"a routing={plan.routing.value!r} plan needs router= (built "
+            f"from segment summaries, e.g. SegmentedIndex.router())"
+        )
+    if _is_host_loop(plan) and tuple(router.part_rows) != plan.part_rows:
+        raise ValueError(
+            f"router summarises parts {tuple(router.part_rows)} but the plan "
+            f"lays out {plan.part_rows}; rebuild the router from the current "
+            f"segments"
+        )
+    rq = queries if route_queries is None else route_queries
+    return router.select(rq, plan.nprobe)
+
+
+def _skipped_could_contribute(result: TopKResult, ubs: np.ndarray,
+                              verify_mask: np.ndarray) -> bool:
+    """ROUTED_VERIFIED's fallback predicate: could any unscanned segment
+    still place a member in the top-k?  True when a skipped segment's upper
+    bound reaches the routed result's k-th count -- `>=`, not `>`, because a
+    tied count with a smaller id displaces the k-th slot under the
+    (count desc, id asc) order, and because an unfilled slot (threshold -1)
+    must always force the fallback (every bound is >= a real count of 0)."""
+    if not verify_mask.any():
+        return False
+    thresholds = np.asarray(result.threshold).astype(np.float64)  # [Q]
+    return bool((ubs[:, verify_mask] >= thresholds[:, None]).any())
+
+
+def _run_host_parts(plan: QueryPlan, parts, queries, router=None,
+                    route_queries=None) -> TopKResult:
+    """Host-orchestrated part streaming (SEGMENTED and MULTILOAD host_loop),
+    with coarse routing when the plan asks for it: ROUTED scans only the
+    router-selected parts; ROUTED_VERIFIED additionally checks the skipped
+    parts' upper bounds against the routed threshold and falls back to the
+    full scan when a skipped part could still contribute -- making it
+    bit-for-bit identical to routing=NONE."""
+    if len(parts) != plan.n_parts:
+        raise ValueError(f"plan lays out {plan.n_parts} parts, got {len(parts)}")
+    if plan.routing is Routing.NONE:
+        return _scan_host_parts(plan, parts, queries)
+    mask, ubs = _route(plan, router, queries, route_queries)
+    routed = _scan_host_parts(plan, parts, queries, part_mask=mask)
+    if plan.routing is Routing.ROUTED:
+        return routed
+    if not _skipped_could_contribute(routed, ubs, ~mask):
+        return routed
+    return _scan_host_parts(plan, parts, queries)
 
 
 def _mesh_key(mesh: jax.sharding.Mesh) -> tuple:
@@ -529,16 +637,30 @@ def _build_sharded(plan: QueryPlan, mesh: jax.sharding.Mesh, key):
     """The distributed executor: every shard runs the shared part kernel on
     its local object partition, then the cap-sized candidate buffers merge
     collectively (all-gather + small-buffer select; hierarchical plans merge
-    pod-locally over cheap ICI first, then across pods over DCN)."""
+    pod-locally over cheap ICI first, then across pods over DCN).
+
+    Routed plans take a third operand, `shard_active` int32 [n_shards]
+    (replicated): inactive shards blank their candidate buffers to -1 before
+    the gather, so unrouted shards contribute nothing to the merge.  Under
+    SPMD every shard still runs the match (the savings routing buys on the
+    host loops become result-masking here); an all-ones mask makes the
+    program a bit-exact full scan, which is what the verified fallback
+    re-runs -- same compiled executable, no second trace."""
     axes = tuple(mesh.axis_names)
     hier = plan.hierarchical and axes[0] == "pod"
     inner_axes = axes[1:] if hier else axes
+    routed = plan.routing is not Routing.NONE
 
-    def _local(data_local: jnp.ndarray, queries: Any) -> TopKResult:
+    def _local(data_local: jnp.ndarray, queries: Any,
+               shard_active: Optional[jnp.ndarray] = None) -> TopKResult:
         _note_trace(key)
         n_local = data_local.shape[0]
         shard = _shard_linear_index(axes)
         gids, gcnt = _part_topk(plan, data_local, queries, shard * n_local)
+        if shard_active is not None:
+            on = shard_active[shard] > 0
+            gids = jnp.where(on, gids, -1)
+            gcnt = jnp.where(on, gcnt, -1)
         if not hier:
             all_ids = jax.lax.all_gather(gids, axis_name=axes, axis=0, tiled=False)
             all_cnt = jax.lax.all_gather(gcnt, axis_name=axes, axis=0, tiled=False)
@@ -552,12 +674,20 @@ def _build_sharded(plan: QueryPlan, mesh: jax.sharding.Mesh, key):
         cnt_out = jax.lax.all_gather(pod.counts, axis_name=("pod",), axis=0, tiled=False)
         return _merge.merge_topk(ids_out, cnt_out, plan.params.k)
 
-    sharded = shard_map_compat(
-        _local, mesh,
-        in_specs=(P(axes), P(None, None)),
-        out_specs=TopKResult(ids=P(None, None), counts=P(None, None),
-                             threshold=P(None)),
-    )
+    out_specs = TopKResult(ids=P(None, None), counts=P(None, None),
+                           threshold=P(None))
+    if routed:
+        sharded = shard_map_compat(
+            _local, mesh,
+            in_specs=(P(axes), P(None, None), P(None)),
+            out_specs=out_specs,
+        )
+    else:
+        sharded = shard_map_compat(
+            lambda data_local, queries: _local(data_local, queries), mesh,
+            in_specs=(P(axes), P(None, None)),
+            out_specs=out_specs,
+        )
     return jax.jit(sharded)
 
 
@@ -568,7 +698,10 @@ def executable(plan: QueryPlan, mesh: Optional[jax.sharding.Mesh] = None):
     Returns ``fn(data, queries) -> TopKResult`` where `data`'s form follows
     the layout: one array (MONOLITHIC / DISTRIBUTED-sharded), a stacked
     [C, Nc, ...] array (MULTILOAD scan), or a list of per-part arrays
-    (SEGMENTED / MULTILOAD host loop)."""
+    (SEGMENTED / MULTILOAD host loop).  Routed DISTRIBUTED executables take
+    a third operand, `shard_active` int32 [n_shards]; routed host-loop
+    callables take `router=` / `route_queries=` keywords (both orchestrated
+    by `execute`)."""
     if plan.layout == Layout.DISTRIBUTED:
         if mesh is None:
             raise ValueError("a DISTRIBUTED plan executes on a mesh; pass mesh=")
@@ -582,13 +715,64 @@ def executable(plan: QueryPlan, mesh: Optional[jax.sharding.Mesh] = None):
         return _cached(key, lambda: _build_scan(plan, key))
     # host-loop layouts: the python orchestration is free to rebuild; the
     # per-part compiled kernels underneath are the cached hot path
-    return lambda parts, queries: _run_host_parts(plan, parts, queries)
+    return lambda parts, queries, router=None, route_queries=None: \
+        _run_host_parts(plan, parts, queries, router=router,
+                        route_queries=route_queries)
+
+
+def _run_routed_sharded(plan: QueryPlan, data, queries,
+                        mesh: jax.sharding.Mesh,
+                        router: Optional["_routing.Router"],
+                        route_queries) -> TopKResult:
+    """Routed DISTRIBUTED execution: segments map onto the shards whose row
+    ranges they overlap, unrouted shards blank their candidate buffers, and
+    ROUTED_VERIFIED re-runs the same executable with an all-ones mask (a
+    bit-exact full scan) when a segment with any inactive shard could still
+    reach the routed threshold."""
+    mask, ubs = _route(plan, router, queries, route_queries)
+    n_total = int(data.shape[0])
+    n_shards = int(np.prod(mesh.devices.shape))
+    n_local = max(n_total // n_shards, 1)
+    if sum(router.part_rows) > n_total:
+        raise ValueError(
+            f"router summarises {sum(router.part_rows)} rows but the sharded "
+            f"data holds {n_total}; rebuild the router from the current "
+            f"segments"
+        )
+    active = _routing.shard_mask(router.part_rows, mask, n_local, n_shards)
+    fn = executable(plan, mesh=mesh)
+    res = fn(data, queries, jnp.asarray(active, dtype=jnp.int32))
+    if plan.routing is Routing.ROUTED:
+        return res
+    # a segment fully covered by active shards was scanned (possibly as a
+    # bonus rider on a routed neighbour's shard) -- verify only the rest
+    verify = _routing.segments_needing_verify(router.part_rows, active, n_local)
+    if not _skipped_could_contribute(res, ubs, verify):
+        return res
+    return fn(data, queries, jnp.ones((n_shards,), dtype=jnp.int32))
 
 
 def execute(plan: QueryPlan, data, queries,
-            mesh: Optional[jax.sharding.Mesh] = None) -> TopKResult:
+            mesh: Optional[jax.sharding.Mesh] = None,
+            router: Optional["_routing.Router"] = None,
+            route_queries=None) -> TopKResult:
     """Run a planned search.  The only public door to the match/select/merge
-    machinery -- every index/serving entry point delegates here."""
+    machinery -- every index/serving entry point delegates here.
+
+    Routed plans (`plan.routing` != NONE) need `router=` -- a
+    `routing.Router` over the current segments' summaries
+    (`SegmentedIndex.router()`).  `route_queries=` supplies the canonical
+    WIDE query pytree the summaries score against; it defaults to `queries`
+    and must be passed whenever `queries` are PACKED (the router cannot read
+    packed words)."""
+    if plan.routing is not Routing.NONE and plan.layout == Layout.DISTRIBUTED:
+        if mesh is None:
+            raise ValueError("a DISTRIBUTED plan executes on a mesh; pass mesh=")
+        return _run_routed_sharded(plan, data, queries, mesh, router,
+                                   route_queries)
+    if _is_host_loop(plan):
+        return executable(plan, mesh=mesh)(data, queries, router=router,
+                                           route_queries=route_queries)
     return executable(plan, mesh=mesh)(data, queries)
 
 

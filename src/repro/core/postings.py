@@ -37,7 +37,9 @@ class PostingsIndex:
     def build(cls, keywords: np.ndarray, n_keywords: int) -> "PostingsIndex":
         """keywords: int [N, m] -- m keyword ids per object (LSH signatures
         offset by function index, n-gram bucket ids, (attr, value) codes...)."""
-        t0 = time.time()
+        # perf_counter, not time(): a wall-clock (NTP) step must never record
+        # a negative build duration
+        t0 = time.perf_counter()
         n, m = keywords.shape
         flat = keywords.astype(np.int64).ravel()
         obj = np.repeat(np.arange(n, dtype=np.int32), m)
@@ -52,7 +54,7 @@ class PostingsIndex:
             total_postings=int(flat.size),
             max_list_len=int(counts.max()) if counts.size else 0,
             bytes_device=int(indices.nbytes + indptr.nbytes),
-            build_seconds=time.time() - t0,
+            build_seconds=time.perf_counter() - t0,
         )
         return cls(n_objects=n, n_keywords=n_keywords, indptr=indptr, indices=indices, stats=stats)
 

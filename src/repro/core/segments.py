@@ -41,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.core import engines as _engines
 from repro.core import plan as _plan
+from repro.core import routing as _routing
 from repro.core.index import GenieIndex
 from repro.core.types import (Engine, IndexStats, SignatureLayout,
                               TopKMethod, TopKResult)
@@ -154,38 +155,75 @@ class SegmentedIndex:
         return seg
 
     # ------------------------------------------------------------------
+    # Coarse routing (core/routing.py)
+    # ------------------------------------------------------------------
+    def router(self) -> _routing.Router:
+        """A Router over the sealed segments' summaries (built at seal time,
+        merged through compaction).  Raises when any segment lacks one --
+        e.g. a GenieIndex assembled by hand outside build()."""
+        if not self.segments:
+            raise ValueError("empty SegmentedIndex: add() first")
+        missing = [i for i, s in enumerate(self.segments) if s.summary is None]
+        if missing:
+            raise ValueError(
+                f"segments {missing} carry no routing summary (assembled "
+                f"outside GenieIndex.build?); routing needs per-segment "
+                f"summaries"
+            )
+        return _routing.Router(engine=self.engine,
+                               summaries=[s.summary for s in self.segments])
+
+    def _routed_execute(self, plan, queries,
+                        routing: _routing.Routing) -> TopKResult:
+        # the router scores canonical WIDE queries; the executor gets them
+        # packed when the segments are PACKED
+        q_wide = self.model.prepare_queries(queries)
+        q_exec = q_wide
+        if self.signature_layout is SignatureLayout.PACKED:
+            q_exec = self.model.pack_queries(q_wide)
+        router = self.router() if routing is not _routing.Routing.NONE else None
+        return _plan.execute(plan, [s.data for s in self.segments], q_exec,
+                             router=router, route_queries=q_wide)
+
+    # ------------------------------------------------------------------
     # Search: per-segment match + select, exact cap-buffer merge
     # ------------------------------------------------------------------
     def search(self, queries, k: int, method: TopKMethod = TopKMethod.CPQ,
-               candidate_cap: int | None = None) -> TopKResult:
+               candidate_cap: int | None = None,
+               routing: _routing.Routing | str = _routing.Routing.NONE,
+               nprobe: int | None = None) -> TopKResult:
         if not self.segments:
             raise ValueError("empty SegmentedIndex: add() first")
+        routing = _routing.Routing(routing)
         plan = _plan.plan_search(
             self.engine, k, self.max_count, layout=_plan.Layout.SEGMENTED,
             part_rows=tuple(self.segment_rows), method=method,
             candidate_cap=candidate_cap, use_kernel=self.use_kernel,
             signature_layout=self.signature_layout,
+            routing=routing, nprobe=nprobe,
         )
-        return _plan.execute(
-            plan, [s.data for s in self.segments],
-            self.model.prepare_queries_for(queries, self.signature_layout))
+        return self._routed_execute(plan, queries, routing)
 
     def search_multiload(self, queries, k: int,
-                         method: TopKMethod = TopKMethod.CPQ) -> TopKResult:
+                         method: TopKMethod = TopKMethod.CPQ,
+                         candidate_cap: int | None = None,
+                         routing: _routing.Routing | str = _routing.Routing.NONE,
+                         nprobe: int | None = None) -> TopKResult:
         """Stream the segments through the device one at a time (paper
         section III-D's host loop) -- segments of heterogeneous sizes are the
         parts, so nothing is re-concatenated or re-padded."""
         if not self.segments:
             raise ValueError("empty SegmentedIndex: add() first")
+        routing = _routing.Routing(routing)
         plan = _plan.plan_search(
             self.engine, k, self.max_count, layout=_plan.Layout.MULTILOAD,
             part_rows=tuple(self.segment_rows), n_objects=self.n_objects,
-            method=method, use_kernel=self.use_kernel, host_loop=True,
+            method=method, candidate_cap=candidate_cap,
+            use_kernel=self.use_kernel, host_loop=True,
             signature_layout=self.signature_layout,
+            routing=routing, nprobe=nprobe,
         )
-        return _plan.execute(
-            plan, [s.data for s in self.segments],
-            self.model.prepare_queries_for(queries, self.signature_layout))
+        return self._routed_execute(plan, queries, routing)
 
     # ------------------------------------------------------------------
     # Compaction
@@ -203,11 +241,13 @@ class SegmentedIndex:
         while len(segs) > max_segments:
             sizes = [s.stats.n_objects for s in segs]
             i = min(range(len(segs) - 1), key=lambda j: sizes[j] + sizes[j + 1])
-            t0 = time.time()
+            # perf_counter, not time(): a wall-clock (NTP) step must never
+            # record a negative compaction duration
+            t0 = time.perf_counter()
             a, b = segs[i].stats, segs[i + 1].stats
             arr = jnp.concatenate([segs[i].data, segs[i + 1].data], axis=0)
             jax.block_until_ready(arr)
-            t_total += time.time() - t0
+            t_total += time.perf_counter() - t0
             # aggregate the sources' stats instead of recomputing on `arr`:
             # every field is additive (or a max), and a PACKED `arr` holds
             # words/bytes -- build_stats would misread its width as signature
@@ -227,10 +267,19 @@ class SegmentedIndex:
                                          + b.bytes_signatures_packed),
                 extra={"engine": self.engine.value},
             )
+            # routing summaries merge like the stats: bounds widen, sketches
+            # OR, centroids row-weight -- no recompute on the (possibly
+            # packed) concatenated array.  A hand-assembled summary-less
+            # source poisons the merge to None (router() then explains why).
+            summary = None
+            if segs[i].summary is not None and segs[i + 1].summary is not None:
+                summary = _routing.merge_summaries(segs[i].summary,
+                                                   segs[i + 1].summary)
             segs[i:i + 2] = [GenieIndex(engine=self.engine, max_count=self.max_count,
                                         data=arr, stats=stats,
                                         use_kernel=self.use_kernel,
-                                        signature_layout=self.signature_layout)]
+                                        signature_layout=self.signature_layout,
+                                        summary=summary)]
         self.segments = segs
         self.compaction_count += 1
         self.compaction_seconds += t_total

@@ -338,8 +338,31 @@ def run_genie_cell(dataset: str, mesh_kind: str) -> dict:
         step = plan_lib.executable(plan, mesh=mesh)
         lowered = step.lower(data_sds, query_sds)
         compiled = lowered.compile()
+        # routed serving variant (core/routing.py): same sharded layout plus
+        # the replicated shard_active mask operand that blanks unrouted
+        # shards' candidate buffers.  Lowered + compiled alongside the full
+        # scan so the dry-run prices both programs the service can dispatch
+        # (ROUTED_VERIFIED's fallback re-runs this same executable with an
+        # all-ones mask, so these two cells are the entire serving surface).
+        routed_plan = plan_lib.plan_search(
+            ds.engine, params.k, params.max_count,
+            layout=plan_lib.Layout.DISTRIBUTED, n_objects=ds.n_objects,
+            use_kernel=params.use_kernel,
+            hierarchical=(mesh_kind == "multi"
+                          and tuple(mesh.axis_names)[0] == "pod"),
+            mesh_axes=tuple(mesh.axis_names),
+            routing="routed_verified",
+        )
+        t1 = time.time()
+        routed_step = plan_lib.executable(routed_plan, mesh=mesh)
+        routed_lowered = routed_step.lower(
+            data_sds, query_sds, jax.ShapeDtypeStruct((n_dev,), jnp.int32))
+        routed_compiled = routed_lowered.compile()
+        routed_seconds = time.time() - t1
     rep = _report(lowered, compiled, time.time() - t0)
     rep["plan"] = plan.describe()
+    rep["routing"] = _report(routed_lowered, routed_compiled, routed_seconds)
+    rep["routing"]["plan"] = routed_plan.describe()
     # Pallas kernel cost model (per device): the deployable TPU path streams
     # the signature matrix once per query batch with VMEM-resident count
     # tiles; the XLA fallback engine recorded above re-reads its [Q, N]

@@ -44,6 +44,7 @@ from repro.core import SegmentedIndex, TopKMethod, distributed
 from repro.core import engines as engines_lib
 from repro.core import lsh as lsh_lib
 from repro.core import plan as plan_lib
+from repro.core import routing as routing_lib
 from repro.core.lsh import tau_ann
 from repro.core.types import SignatureLayout
 
@@ -83,6 +84,9 @@ class RetrievalService:
         self._items: list = []
         # sharded-serving placement cache: (corpus fingerprint, data, n)
         self._placed: Optional[tuple] = None
+        # router cache: (corpus fingerprint, Router) -- invalidated by the
+        # same fingerprint that refreshes the sharded placement
+        self._routed: Optional[tuple] = None
 
     def _make_params(self, d: int):
         key = jax.random.PRNGKey(self.seed)
@@ -155,19 +159,46 @@ class RetrievalService:
             self._placed = (fp, data, n)
         return self._placed[1], self._placed[2]
 
+    def _router(self) -> routing_lib.Router:
+        """Router over the current segments' summaries, cached until the
+        corpus changes (same fingerprint as the sharded placement)."""
+        fp = self._corpus_fingerprint()
+        if self._routed is None or self._routed[0] != fp:
+            self._routed = (fp, self._index.router())
+        return self._routed[1]
+
     def search(self, queries, k: int = 10, *, embeddings: Optional[np.ndarray] = None,
-               method: TopKMethod = TopKMethod.CPQ):
+               method: TopKMethod = TopKMethod.CPQ,
+               candidate_cap: Optional[int] = None,
+               routing: routing_lib.Routing | str = routing_lib.Routing.NONE,
+               nprobe: Optional[int] = None):
+        """tau-ANN retrieval over the sealed corpus.
+
+        `routing` plugs the coarse router (core/routing.py) in front of the
+        exact match: 'routed' scans only the segments/shards the router
+        selects (approximate), 'routed_verified' additionally verifies the
+        result threshold against the skipped segments' upper bounds and falls
+        back to the full scan when one could still contribute (results then
+        bit-for-bit identical to 'none').  Router state is rebuilt whenever
+        the corpus fingerprint changes (an add or a compaction)."""
         if self._index is None:
             # a real exception, not an assert: asserts vanish under python -O
             raise ValueError(
                 "RetrievalService index is empty (no items added yet): "
                 "call add() before search()"
             )
+        if queries is not None:
+            # materialise iterators/generators before len() -- same contract
+            # as add(items); embed_fn receives the list either way
+            queries = list(queries)
+        routing = routing_lib.Routing(routing)
         emb = self._embed(queries, embeddings,
                           expect_rows=None if queries is None else len(queries))
         qsigs = self._hash(emb)
         if self.mesh is None:
-            res = self._index.search(qsigs, k=k, method=method)
+            res = self._index.search(qsigs, k=k, method=method,
+                                     candidate_cap=candidate_cap,
+                                     routing=routing, nprobe=nprobe)
         else:
             # sharded serving: the segmented corpus planned across the mesh
             # via the DISTRIBUTED layout, served by the same executor --
@@ -176,14 +207,24 @@ class RetrievalService:
             plan = plan_lib.plan_search(
                 self._scheme.engine, k, self._index.max_count,
                 layout=plan_lib.Layout.DISTRIBUTED, n_objects=n, method=method,
+                candidate_cap=candidate_cap,
                 use_kernel=self._index.use_kernel,
                 mesh_axes=tuple(self.mesh.axis_names),
                 signature_layout=self.signature_layout,
+                routing=routing, nprobe=nprobe,
             )
-            canonical = engines_lib.get(self._scheme.engine).prepare_queries_for(
-                qsigs, self.signature_layout)
+            model = engines_lib.get(self._scheme.engine)
+            # the router scores canonical WIDE queries; the executor gets
+            # them packed when the corpus is PACKED
+            q_wide = model.prepare_queries(qsigs)
+            canonical = q_wide
+            if SignatureLayout(self.signature_layout) is SignatureLayout.PACKED:
+                canonical = model.pack_queries(q_wide)
             qq = jax.device_put(canonical, distributed.replicated(self.mesh, 2))
-            res = plan_lib.execute(plan, data, qq, mesh=self.mesh)
+            router = (self._router()
+                      if routing is not routing_lib.Routing.NONE else None)
+            res = plan_lib.execute(plan, data, qq, mesh=self.mesh,
+                                   router=router, route_queries=q_wide)
         # scheme-paired MLE: c/m for bucketed families (Eqn 7), the simhash
         # angle inversion for COSINE
         sims = self._scheme.mle(np.asarray(res.counts), self.m)
@@ -198,9 +239,10 @@ class RetrievalService:
         rows = np.asarray(result_ids)
         bad = rows[(rows >= n) | (rows < -1)]
         if bad.size:
+            # "0..-1" is not a range: name the empty corpus explicitly
+            valid = f"valid ids are 0..{n - 1}" if n else "no ids are valid"
             raise ValueError(
                 f"items_for: id {int(bad.flat[0])} is outside the corpus "
-                f"({n} items indexed; valid ids are 0..{n - 1}, or -1 for "
-                f"an empty top-k slot)"
+                f"({n} items indexed; {valid}, or -1 for an empty top-k slot)"
             )
         return [[self._items[int(i)] if i >= 0 else None for i in row] for row in rows]

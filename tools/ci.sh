@@ -21,6 +21,9 @@ python -m pytest -q -k "not distributed" tests/test_segments.py
 echo "--- planner parity (execute(plan) == legacy paths, plan-cache hits) ---"
 python -m pytest -q -k "not distributed and not sharded_serving" tests/test_plan.py
 
+echo "--- routing conformance (ROUTED_VERIFIED == full scan bit-for-bit) ---"
+python -m pytest -q -k "not distributed" tests/test_routing.py
+
 if [[ "${1:-}" == "--fast" ]]; then
     # (tests/test_plan.py's fast, non-subprocess lane already ran above)
     python -m pytest -x -q \
@@ -42,4 +45,7 @@ PYTHONPATH=".:$PYTHONPATH" python benchmarks/bench_serve_latency.py
 
 echo "--- signature-storage roofline (BENCH JSON; packed <= wide/4 gate) ---"
 PYTHONPATH=".:$PYTHONPATH" python benchmarks/roofline.py
+
+echo "--- coarse-routing micro-benchmark (BENCH JSON; parity + <50% scanned at recall >= 0.95) ---"
+PYTHONPATH=".:$PYTHONPATH" python benchmarks/bench_routing.py
 echo "CI smoke OK"

@@ -11,6 +11,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         bench_add_throughput,
+        bench_frontend,
         bench_routing,
         bench_serve_latency,
         fig8_num_hash,
@@ -31,7 +32,7 @@ def main() -> None:
         fig8_num_hash, fig9_multiquery, fig10_datasize, fig12_load_balance,
         table1_profiling, table2_multiload, fig13_cpq, fig14_approx_ratio,
         table5_knn_predict, table6_sequence, bench_add_throughput,
-        bench_serve_latency, bench_routing, roofline,
+        bench_serve_latency, bench_frontend, bench_routing, roofline,
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -305,6 +305,58 @@ def plan_search(
 
 
 # ---------------------------------------------------------------------------
+# Batch compatibility (the serving front-end's coalescing key)
+# ---------------------------------------------------------------------------
+
+def k_bucket(k: int) -> int:
+    """Round k up to the next power of two (floor 1).
+
+    The serving front-end (serve/frontend.py) coalesces concurrent requests
+    into one device dispatch; bucketing k means requests for k=5 and k=8
+    share the k=8 executable instead of fragmenting the plan cache per exact
+    k.  Truncating a top-8 result to a request's own k is bit-for-bit
+    identical to searching at that k: the (count desc, id asc) order is
+    total, so a top-k result is a prefix of any larger top-k' result."""
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    return 1 << (int(k) - 1).bit_length()
+
+
+def batch_compat_key(
+    engine: Engine | str,
+    layout: Layout | str,
+    signature_layout: SignatureLayout | str,
+    routing: Routing | str,
+    method: TopKMethod | str,
+    k: int,
+    *,
+    nprobe: Optional[int] = None,
+    candidate_cap: Optional[int] = None,
+) -> tuple:
+    """The coalescing key of one serving request: two requests with equal
+    keys can share a single planned dispatch (stacked queries, one
+    executable) and still scatter bit-for-bit per-request results.
+
+    The axes are exactly the ones the executable cache keys on -- engine x
+    layout x signature_layout x routing x method x k-bucket -- plus the two
+    knobs that change a plan's selection behaviour (nprobe, candidate_cap).
+    An explicit candidate_cap disables k-bucketing: the effective buffer
+    capacity is max(cap, k), so bucketing k would silently change the cap
+    the caller pinned."""
+    kb = int(k) if candidate_cap is not None else k_bucket(k)
+    return (
+        Engine(engine) if not isinstance(engine, Engine) else engine,
+        Layout(layout),
+        SignatureLayout(signature_layout),
+        Routing(routing),
+        TopKMethod(method),
+        kb,
+        nprobe,
+        candidate_cap,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Pad policy (the only pad masking / pad filling in the system)
 # ---------------------------------------------------------------------------
 

@@ -173,15 +173,18 @@ class SegmentedIndex:
         return _routing.Router(engine=self.engine,
                                summaries=[s.summary for s in self.segments])
 
-    def _routed_execute(self, plan, queries,
-                        routing: _routing.Routing) -> TopKResult:
+    def _routed_execute(self, plan, queries, routing: _routing.Routing,
+                        router: _routing.Router | None = None) -> TopKResult:
         # the router scores canonical WIDE queries; the executor gets them
         # packed when the segments are PACKED
         q_wide = self.model.prepare_queries(queries)
         q_exec = q_wide
         if self.signature_layout is SignatureLayout.PACKED:
             q_exec = self.model.pack_queries(q_wide)
-        router = self.router() if routing is not _routing.Routing.NONE else None
+        if routing is _routing.Routing.NONE:
+            router = None
+        elif router is None:
+            router = self.router()
         return _plan.execute(plan, [s.data for s in self.segments], q_exec,
                              router=router, route_queries=q_wide)
 
@@ -191,7 +194,11 @@ class SegmentedIndex:
     def search(self, queries, k: int, method: TopKMethod = TopKMethod.CPQ,
                candidate_cap: int | None = None,
                routing: _routing.Routing | str = _routing.Routing.NONE,
-               nprobe: int | None = None) -> TopKResult:
+               nprobe: int | None = None,
+               router: _routing.Router | None = None) -> TopKResult:
+        """`router` lets a caller that caches the Router across searches
+        (serve/retrieval.py keys it on the corpus fingerprint) skip the
+        per-search rebuild; ignored when routing is NONE."""
         if not self.segments:
             raise ValueError("empty SegmentedIndex: add() first")
         routing = _routing.Routing(routing)
@@ -202,13 +209,14 @@ class SegmentedIndex:
             signature_layout=self.signature_layout,
             routing=routing, nprobe=nprobe,
         )
-        return self._routed_execute(plan, queries, routing)
+        return self._routed_execute(plan, queries, routing, router=router)
 
     def search_multiload(self, queries, k: int,
                          method: TopKMethod = TopKMethod.CPQ,
                          candidate_cap: int | None = None,
                          routing: _routing.Routing | str = _routing.Routing.NONE,
-                         nprobe: int | None = None) -> TopKResult:
+                         nprobe: int | None = None,
+                         router: _routing.Router | None = None) -> TopKResult:
         """Stream the segments through the device one at a time (paper
         section III-D's host loop) -- segments of heterogeneous sizes are the
         parts, so nothing is re-concatenated or re-padded."""
@@ -223,7 +231,7 @@ class SegmentedIndex:
             signature_layout=self.signature_layout,
             routing=routing, nprobe=nprobe,
         )
-        return self._routed_execute(plan, queries, routing)
+        return self._routed_execute(plan, queries, routing, router=router)
 
     # ------------------------------------------------------------------
     # Compaction

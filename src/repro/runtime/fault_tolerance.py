@@ -29,6 +29,12 @@ class HeartbeatMonitor:
     _last: dict[int, float] = dataclasses.field(default_factory=dict)
 
     def beat(self, host_id: int, now: Optional[float] = None) -> None:
+        # deliberately time.time(), not perf_counter(): heartbeats are
+        # compared against deadlines that must be meaningful *across*
+        # processes and hosts (the coordinator and the beating host are not
+        # the same machine), and perf_counter's epoch is process-local.
+        # Duration measurements elsewhere use perf_counter; liveness
+        # deadlines use wall-clock by design.
         self._last[host_id] = time.time() if now is None else now
 
     def alive(self, now: Optional[float] = None) -> list[int]:

@@ -1,2 +1,5 @@
 from repro.serve.engine import ServeEngine, ServeStats  # noqa: F401
+from repro.serve.frontend import IndexService, ServingFrontend  # noqa: F401
+from repro.serve.metrics import FrontendMetrics  # noqa: F401
 from repro.serve.retrieval import RetrievalService  # noqa: F401
+from repro.serve.scheduler import Overloaded, Request, RequestQueue  # noqa: F401

@@ -44,14 +44,16 @@ class ServeEngine:
             # nothing to decode: empty [B, 0] output, zeroed stats, no prefill
             b = jax.tree_util.tree_leaves(batch)[0].shape[0]
             return np.zeros((b, 0), dtype=np.int32), stats
-        t0 = time.time()
+        # perf_counter, not time(): a wall-clock (NTP) step must never record
+        # a negative or inflated prefill/decode duration
+        t0 = time.perf_counter()
         logits, cache, pos = self._prefill(self.params, batch, cache_cap=self.cache_cap)
         logits.block_until_ready()
-        stats.prefill_seconds = time.time() - t0
+        stats.prefill_seconds = time.perf_counter() - t0
 
         key = jax.random.PRNGKey(seed)
         outs = []
-        t0 = time.time()
+        t0 = time.perf_counter()
         for i in range(max_new_tokens):
             if greedy:
                 tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
@@ -62,6 +64,6 @@ class ServeEngine:
             logits, cache = self._decode(self.params, tok, cache, pos)
             pos = pos + 1
         jax.block_until_ready(logits)
-        stats.decode_seconds = time.time() - t0
+        stats.decode_seconds = time.perf_counter() - t0
         stats.tokens_generated = max_new_tokens * outs[0].shape[0]
         return np.concatenate(outs, axis=1), stats

@@ -167,6 +167,47 @@ class RetrievalService:
             self._routed = (fp, self._index.router())
         return self._routed[1]
 
+    def resolve_queries(self, queries, embeddings: Optional[np.ndarray] = None
+                        ) -> np.ndarray:
+        """Materialise and embed one query batch, validating it eagerly:
+        iterators are listed before len(), row counts and dims are checked,
+        and an empty batch raises a ValueError naming the contract (the
+        mirror of the empty-`add()` check) instead of failing downstream
+        with a shape error.  The serving front-end (serve/frontend.py) calls
+        this on the submitter's thread so bad requests fail synchronously."""
+        if queries is not None:
+            # materialise iterators/generators before len() -- same contract
+            # as add(items); embed_fn receives the list either way
+            queries = list(queries)
+        eshape = None if embeddings is None else np.shape(embeddings)
+        empty = (len(queries) == 0 if queries is not None
+                 else bool(eshape) and eshape[0] == 0)
+        if empty:
+            # checked before embed_fn/shape validation so the caller sees
+            # the contract, not a downstream shape error
+            raise ValueError(
+                "cannot search an empty batch of queries (the mirror of the "
+                "empty-add() contract): pass at least one query or embedding "
+                "row"
+            )
+        return self._embed(queries, embeddings,
+                           expect_rows=None if queries is None else len(queries))
+
+    def batch_compat_key(self, k: int, method: TopKMethod,
+                         routing: routing_lib.Routing | str, *,
+                         nprobe: Optional[int] = None,
+                         candidate_cap: Optional[int] = None) -> tuple:
+        """The coalescing key of a search against this service (core/plan.py
+        `batch_compat_key`): two submissions with equal keys reuse one
+        cached executable and can stack into one device dispatch.  The
+        layout axis is resolved the way `search` will execute -- DISTRIBUTED
+        on a mesh-backed service, SEGMENTED otherwise."""
+        layout = (plan_lib.Layout.DISTRIBUTED if self.mesh is not None
+                  else plan_lib.Layout.SEGMENTED)
+        return plan_lib.batch_compat_key(
+            self._scheme.engine, layout, self.signature_layout, routing,
+            method, k, nprobe=nprobe, candidate_cap=candidate_cap)
+
     def search(self, queries, k: int = 10, *, embeddings: Optional[np.ndarray] = None,
                method: TopKMethod = TopKMethod.CPQ,
                candidate_cap: Optional[int] = None,
@@ -187,18 +228,19 @@ class RetrievalService:
                 "RetrievalService index is empty (no items added yet): "
                 "call add() before search()"
             )
-        if queries is not None:
-            # materialise iterators/generators before len() -- same contract
-            # as add(items); embed_fn receives the list either way
-            queries = list(queries)
         routing = routing_lib.Routing(routing)
-        emb = self._embed(queries, embeddings,
-                          expect_rows=None if queries is None else len(queries))
+        emb = self.resolve_queries(queries, embeddings)
         qsigs = self._hash(emb)
         if self.mesh is None:
+            # the cached per-tenant router (fingerprint-keyed) rides into the
+            # segment search, so interleaved add/search only rebuild routing
+            # state when the corpus actually changed
+            router = (self._router()
+                      if routing is not routing_lib.Routing.NONE else None)
             res = self._index.search(qsigs, k=k, method=method,
                                      candidate_cap=candidate_cap,
-                                     routing=routing, nprobe=nprobe)
+                                     routing=routing, nprobe=nprobe,
+                                     router=router)
         else:
             # sharded serving: the segmented corpus planned across the mesh
             # via the DISTRIBUTED layout, served by the same executor --

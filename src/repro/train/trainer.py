@@ -88,12 +88,15 @@ class Trainer:
         state, step = self._try_resume(state)
         while step < self.tc.total_steps:
             try:
-                t0 = time.time()
+                # perf_counter, not time(): straggler detection compares
+                # per-step durations across hosts, and a wall-clock (NTP)
+                # step would record a negative or inflated step time
+                t0 = time.perf_counter()
                 if self.fail_injector is not None:
                     self.fail_injector(step)
                 batch = self.pipeline.batch(step)
                 state, metrics = self.step_fn(state, batch)
-                dt = time.time() - t0
+                dt = time.perf_counter() - t0
                 self.straggler.record(self.data.host_id, dt)
                 step += 1
                 if step % self.tc.log_every == 0 or step == self.tc.total_steps:

@@ -1,0 +1,488 @@
+"""Serving front-end conformance: coalesced multi-tenant results must be
+bit-for-bit identical to serial per-request `search` across every engine,
+routed and unrouted, and the queue/admission/drain machinery must behave
+deterministically.
+
+The load-bearing invariant: a coalesced dispatch stacks the query rows of
+several requests and runs at the shared bucketed k; each request's result is
+a row-slice and k-prefix of that dispatch.  Because every engine's result
+order is total ((count desc, id asc)) and per-query independent, the slice
+equals the serial per-request search exactly -- ids, counts, thresholds,
+sims.  Routing='routed_verified' keeps the guarantee (it is bit-for-bit
+equal to the full scan by construction); plain 'routed' is batch-dependent
+by contract and is excluded from the bit-exactness matrix.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.core import Engine, TopKMethod
+from repro.core import plan as plan_lib
+from repro.core.engines import get as get_model
+from repro.core.routing import Routing
+from repro.core.segments import SegmentedIndex
+from repro.serve import (IndexService, Overloaded, RetrievalService,
+                         ServingFrontend)
+from repro.serve.metrics import FrontendMetrics, percentile
+from repro.serve.scheduler import Request, RequestQueue, coalesce
+
+ENGINES = [Engine.EQ, Engine.RANGE, Engine.MINSUM, Engine.IP,
+           Engine.TANIMOTO, Engine.COSINE]
+SEG_ROWS = (40, 25, 17)
+
+
+def _example(engine: Engine, n: int, q: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return get_model(engine).example(rng, n, q)
+
+
+def _build_index(engine: Engine, seed: int = 0) -> tuple[SegmentedIndex, object]:
+    """A 3-uneven-segment index plus a query batch, reference-path (fast)."""
+    data, queries, max_count = _example(engine, sum(SEG_ROWS), 16, seed)
+    idx = SegmentedIndex(engine=engine, max_count=max_count, use_kernel=False)
+    lo = 0
+    for rows in SEG_ROWS:
+        idx.add(data[lo:lo + rows])
+        lo += rows
+    return idx, queries
+
+
+def _stackable(engine: Engine, queries):
+    """Queries as one array with axis 0 = query rows (RANGE's (lo, hi) pair
+    stacks to [q, 2, d]), plus the adapter back to the engine's form."""
+    if engine is Engine.RANGE:
+        return (np.stack([np.asarray(queries[0]), np.asarray(queries[1])],
+                         axis=1),
+                lambda a: (a[:, 0, :], a[:, 1, :]))
+    return np.asarray(queries), None
+
+
+def _assert_result_equal(ref, refsims, got, gotsims, ctx=""):
+    assert np.array_equal(np.asarray(ref.ids), np.asarray(got.ids)), ctx
+    assert np.array_equal(np.asarray(ref.counts), np.asarray(got.counts)), ctx
+    assert np.array_equal(np.asarray(ref.threshold),
+                          np.asarray(got.threshold)), ctx
+    if refsims is None:
+        assert gotsims is None, ctx
+    else:
+        assert np.array_equal(np.asarray(refsims), np.asarray(gotsims)), ctx
+
+
+# ---------------------------------------------------------------------------
+# core/plan: the batch-compatibility key
+# ---------------------------------------------------------------------------
+
+def test_k_bucket_rounds_up_to_power_of_two():
+    assert [plan_lib.k_bucket(k) for k in (1, 2, 3, 4, 5, 8, 9, 16, 17)] == \
+        [1, 2, 4, 4, 8, 8, 16, 16, 32]
+    with pytest.raises(ValueError, match="k must be"):
+        plan_lib.k_bucket(0)
+
+
+def test_batch_compat_key_axes():
+    base = plan_lib.batch_compat_key(Engine.EQ, "segmented", "wide", "none",
+                                     TopKMethod.CPQ, 10)
+    # k=10 and k=16 share the 16-bucket; k=17 does not
+    assert base == plan_lib.batch_compat_key(Engine.EQ, "segmented", "wide",
+                                             "none", TopKMethod.CPQ, 16)
+    for kw in (dict(k=17), dict(method=TopKMethod.SORT),
+               dict(routing="routed_verified"), dict(engine=Engine.COSINE),
+               dict(layout="distributed"), dict(nprobe=2),
+               dict(candidate_cap=32)):
+        args = dict(engine=Engine.EQ, layout="segmented",
+                    signature_layout="wide", routing="none",
+                    method=TopKMethod.CPQ, k=10)
+        extra = {k: v for k, v in kw.items() if k in ("nprobe", "candidate_cap")}
+        args.update({k: v for k, v in kw.items() if k not in extra})
+        assert plan_lib.batch_compat_key(**args, **extra) != base, kw
+    # an explicit candidate_cap pins exact k (no bucketing): k=10 != k=16
+    assert plan_lib.batch_compat_key(
+        Engine.EQ, "segmented", "wide", "none", TopKMethod.CPQ, 10,
+        candidate_cap=32,
+    ) != plan_lib.batch_compat_key(
+        Engine.EQ, "segmented", "wide", "none", TopKMethod.CPQ, 16,
+        candidate_cap=32)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: coalescing + admission
+# ---------------------------------------------------------------------------
+
+def _req(seq, tenant, q, key, k=4):
+    return Request(seq=seq, tenant=tenant, embeddings=np.zeros((q, 3)),
+                   k=k, dispatch_k=plan_lib.k_bucket(k),
+                   method=TopKMethod.CPQ, routing=Routing.NONE, nprobe=None,
+                   candidate_cap=None, key=(tenant, key), future=Future(),
+                   submitted_at=time.perf_counter())
+
+
+def test_coalesce_groups_by_key_and_chunks_by_max_batch():
+    reqs = [_req(0, "a", 4, "x"), _req(1, "b", 4, "x"), _req(2, "a", 4, "x"),
+            _req(3, "a", 4, "y"), _req(4, "a", 9, "x")]
+    groups = coalesce(reqs, max_batch=8)
+    # (a, x) chunks into [0, 2] then [4] (9 rows alone exceeds the cap but a
+    # single request is never split); (b, x) and (a, y) are their own groups
+    seqs = [[r.seq for r in g] for g in groups]
+    assert seqs == [[0, 2], [1], [3], [4]]
+    assert all(len({r.key for r in g}) == 1 for g in groups)
+
+
+def test_request_queue_admission_and_drain():
+    q = RequestQueue(max_queue=2, max_batch=64, max_wait_s=0.0)
+    q.offer(_req(0, "a", 1, "x"))
+    q.offer(_req(1, "a", 1, "x"))
+    with pytest.raises(Overloaded) as ei:
+        q.offer(_req(2, "a", 1, "x"))
+    assert ei.value.queue_depth == 2 and ei.value.max_queue == 2
+    assert ei.value.tenant == "a"
+    stop = threading.Event()
+    groups = q.take(stop)
+    assert [[r.seq for r in g] for g in groups] == [[0, 1]]
+    assert q.depth() == 0
+    stop.set()
+    assert q.take(stop) is None     # stopped + drained -> exit signal
+
+
+# ---------------------------------------------------------------------------
+# the bit-exactness matrix: 6 engines x routing on/off
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES, ids=[e.value for e in ENGINES])
+@pytest.mark.parametrize("routing", [Routing.NONE, Routing.ROUTED_VERIFIED],
+                         ids=["unrouted", "routed"])
+def test_coalesced_parity_matrix(engine, routing):
+    """Coalesced dispatch == serial per-request search, bit for bit."""
+    idx, queries = _build_index(engine)
+    stacked, adapter = _stackable(engine, queries)
+    svc = IndexService(index=idx, query_adapter=adapter)
+    nprobe = 1 if routing is not Routing.NONE else None
+
+    fe = ServingFrontend(max_wait_us=0, start=False)
+    fe.register(engine.value, svc)
+    # mixed k across one bucket (3, 4 -> 4) plus a second bucket (10 -> 16),
+    # overlapping query slices, submitted before the loop starts so the
+    # first take() drains and coalesces them all
+    slices = [(0, 6, 3), (6, 16, 4), (2, 10, 10), (8, 16, 3)]
+    futs = [fe.submit(engine.value, None, k=k, embeddings=stacked[lo:hi],
+                      routing=routing, nprobe=nprobe)
+            for lo, hi, k in slices]
+    fe.start()
+    results = [f.result(timeout=120) for f in futs]
+    fe.close()
+
+    st = fe.stats()
+    assert st["dispatches"] < len(slices)          # coalescing happened
+    assert st["coalesce_ratio"] > 1.0
+    for (lo, hi, k), (got, gotsims) in zip(slices, results):
+        ref, refsims = svc.search(None, k=k, embeddings=stacked[lo:hi],
+                                  routing=routing, nprobe=nprobe)
+        _assert_result_equal(ref, refsims, got, gotsims,
+                             ctx=f"{engine.value} k={k} routing={routing.value}")
+        # routed_verified must also equal the unrouted full scan
+        if routing is Routing.ROUTED_VERIFIED:
+            full, _ = svc.search(None, k=k, embeddings=stacked[lo:hi])
+            _assert_result_equal(full, None, got, None,
+                                 ctx=f"{engine.value} verified!=full k={k}")
+
+
+def test_mixed_tenants_concurrent_submitters():
+    """All six engines as tenants of ONE front-end, submitted from four
+    concurrent client threads: every future resolves to its serial result."""
+    tenants = {}
+    for engine in ENGINES:
+        idx, queries = _build_index(engine, seed=3)
+        stacked, adapter = _stackable(engine, queries)
+        tenants[engine.value] = (IndexService(index=idx, query_adapter=adapter),
+                                 stacked)
+    with ServingFrontend(max_wait_us=5000) as fe:
+        for name, (svc, _) in tenants.items():
+            fe.register(name, svc)
+
+        futs: list[tuple] = []
+        flock = threading.Lock()
+
+        def client(worker: int):
+            for i, (name, (_, stacked)) in enumerate(tenants.items()):
+                lo = (worker + i) % 8
+                k = 3 + ((worker + i) % 3)
+                f = fe.submit(name, None, k=k, embeddings=stacked[lo:lo + 5])
+                with flock:
+                    futs.append((name, lo, k, f))
+
+        threads = [threading.Thread(target=client, args=(w,)) for w in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        resolved = [(name, lo, k, f.result(timeout=120))
+                    for name, lo, k, f in futs]
+        st = fe.stats()
+    assert len(resolved) == 4 * len(ENGINES)
+    for name, lo, k, (got, gotsims) in resolved:
+        svc, stacked = tenants[name]
+        ref, refsims = svc.search(None, k=k, embeddings=stacked[lo:lo + 5])
+        _assert_result_equal(ref, refsims, got, gotsims, ctx=f"{name} lo={lo}")
+    assert set(st["tenants"]) == {e.value for e in ENGINES}
+
+
+def test_retrieval_service_tenants_with_sims():
+    """create_tenant (full RetrievalService stack: embed -> hash -> search ->
+    MLE): coalesced results and sims match serial search exactly."""
+    rng = np.random.default_rng(0)
+    pts = {name: rng.standard_normal((256, 8)).astype(np.float32)
+           for name in ("acme", "globex")}
+    with ServingFrontend(max_wait_us=200_000, start=False) as fe:
+        fe.create_tenant("acme", embed_fn=np.asarray, scheme="e2lsh",
+                         m_override=16, max_segments=4)
+        fe.create_tenant("globex", embed_fn=np.asarray, scheme="simhash",
+                         m_override=32)
+        for name, p in pts.items():
+            fe.add(name, list(range(128)), embeddings=p[:128])
+            fe.add(name, list(range(128, 256)), embeddings=p[128:])
+        reqs = [("acme", 0, 5), ("globex", 3, 5), ("acme", 7, 8),
+                ("globex", 1, 3), ("acme", 2, 5)]
+        futs = [fe.submit(name, None, k=k, embeddings=pts[name][lo:lo + 4] + .01)
+                for name, lo, k in reqs]
+        fe.start()
+        results = [f.result(timeout=120) for f in futs]
+        st = fe.stats()
+        assert st["dispatches"] < len(reqs)    # per-tenant coalescing
+        for (name, lo, k), (got, gotsims) in zip(reqs, results):
+            svc = fe._tenants[name].service
+            ref, refsims = svc.search(None, k=k,
+                                      embeddings=pts[name][lo:lo + 4] + .01)
+            _assert_result_equal(ref, refsims, got, gotsims,
+                                 ctx=f"{name} k={k}")
+            assert gotsims is not None and gotsims.shape == (4, k)
+
+
+# ---------------------------------------------------------------------------
+# admission control, lifecycle, heartbeats
+# ---------------------------------------------------------------------------
+
+def _tiny_frontend(**kw) -> tuple[ServingFrontend, np.ndarray]:
+    rng = np.random.default_rng(1)
+    pts = rng.standard_normal((64, 6)).astype(np.float32)
+    fe = ServingFrontend(**kw)
+    fe.create_tenant("t", embed_fn=np.asarray, m_override=8)
+    fe.add("t", list(range(64)), embeddings=pts)
+    return fe, pts
+
+
+def test_overload_sheds_with_typed_error():
+    fe, pts = _tiny_frontend(max_queue=2, max_wait_us=0, start=False)
+    fe.submit("t", None, k=2, embeddings=pts[:1])
+    fe.submit("t", None, k=2, embeddings=pts[:1])
+    with pytest.raises(Overloaded) as ei:
+        fe.submit("t", None, k=2, embeddings=pts[:1])
+    assert ei.value.tenant == "t"
+    assert fe.stats()["tenants"]["t"]["shed"] == 1
+    assert fe.stats()["pending_requests"] == 2   # shed request not counted
+    fe.start()
+    fe.close()
+    assert fe.stats()["pending_requests"] == 0   # close() drained the queue
+    with pytest.raises(RuntimeError, match="closed"):
+        fe.submit("t", None, k=2, embeddings=pts[:1])
+
+
+def test_drain_waits_then_removes_tenant():
+    fe, pts = _tiny_frontend(max_wait_us=0)
+    futs = [fe.submit("t", None, k=3, embeddings=pts[:2]) for _ in range(3)]
+    fe.drain("t", timeout=60)
+    for f in futs:                       # admitted work completed, not dropped
+        res, _ = f.result(timeout=0)
+        assert res.ids.shape == (2, 3)
+    assert fe.tenants() == []
+    with pytest.raises(KeyError, match="unknown tenant"):
+        fe.submit("t", None, k=3, embeddings=pts[:2])
+    # the slot is recycled for a new tenant
+    fe.create_tenant("t2", embed_fn=np.asarray, m_override=8)
+    fe.add("t2", [0, 1], embeddings=pts[:2])
+    res, _ = fe.search("t2", None, k=1, embeddings=pts[:1])
+    assert res.ids.shape == (1, 1)
+    fe.close()
+
+
+def test_heartbeat_idle_tenants_and_reap():
+    fe, pts = _tiny_frontend(heartbeat_timeout_s=30.0)
+    fe.search("t", None, k=2, embeddings=pts[:1])
+    now = time.time()
+    assert fe.idle_tenants(now=now) == []
+    assert fe.idle_tenants(now=now + 300) == ["t"]      # heartbeat expired
+    assert fe.reap_idle(now=now + 300, timeout=60) == ["t"]
+    assert fe.tenants() == []
+    fe.close()
+
+
+def test_draining_tenant_rejects_submit_and_add():
+    fe, pts = _tiny_frontend(max_wait_us=0)
+    fe._tenants["t"].draining = True
+    with pytest.raises(ValueError, match="draining"):
+        fe.submit("t", None, k=2, embeddings=pts[:1])
+    with pytest.raises(ValueError, match="draining"):
+        fe.add("t", [99], embeddings=pts[:1])
+    fe.close()
+
+
+# ---------------------------------------------------------------------------
+# empty-batch validation (satellite): the contract, not a shape error
+# ---------------------------------------------------------------------------
+
+def test_empty_query_batch_raises_contract_error():
+    rng = np.random.default_rng(0)
+    pts = rng.standard_normal((32, 4)).astype(np.float32)
+    svc = RetrievalService(embed_fn=np.asarray, m_override=8)
+    svc.add(list(range(32)), embeddings=pts)
+    for bad in (dict(queries=[]), dict(queries=iter(())),
+                dict(queries=None, embeddings=np.empty((0, 4), np.float32))):
+        with pytest.raises(ValueError, match="empty batch of queries"):
+            svc.search(bad.get("queries"), k=3,
+                       embeddings=bad.get("embeddings"))
+    # the front-end rejects synchronously on the submitter's thread
+    fe = ServingFrontend(start=False)
+    fe.register("t", svc)
+    with pytest.raises(ValueError, match="empty batch of queries"):
+        fe.submit("t", [], k=3)
+    # and the raw-index backend mirrors the same contract
+    idx, _ = _build_index(Engine.EQ)
+    with pytest.raises(ValueError, match="empty batch of queries"):
+        IndexService(index=idx).search(np.empty((0, 16), np.int32), k=3)
+    # the add() side of the mirror (pre-existing contract, kept)
+    with pytest.raises(ValueError, match="empty batch of items"):
+        svc.add([], embeddings=np.empty((0, 4), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# cache invalidation under churn (satellite): router + placement refresh
+# exactly when the corpus fingerprint changes
+# ---------------------------------------------------------------------------
+
+def test_router_cache_refreshes_exactly_on_corpus_change():
+    rng = np.random.default_rng(2)
+    pts = rng.standard_normal((96, 6)).astype(np.float32)
+    svc = RetrievalService(embed_fn=np.asarray, m_override=8, max_segments=2)
+    svc.add(list(range(32)), embeddings=pts[:32])
+
+    builds = []
+    orig = svc._index.router
+    svc._index.router = lambda: builds.append(1) or orig()
+    q = pts[:4] + 0.01
+
+    def routed_search():
+        return svc.search(None, k=3, embeddings=q, routing="routed_verified",
+                          nprobe=1)
+
+    routed_search()
+    assert len(builds) == 1                  # built on first routed search
+    routed_search()
+    routed_search()
+    assert len(builds) == 1                  # cached: fingerprint unchanged
+    svc.add(list(range(32, 64)), embeddings=pts[32:64])
+    routed_search()
+    assert len(builds) == 2                  # add() changed the fingerprint
+    routed_search()
+    assert len(builds) == 2
+    # 3rd add exceeds max_segments=2 -> compaction also changes the
+    # fingerprint (segment count + compaction counter)
+    svc.add(list(range(64, 96)), embeddings=pts[64:])
+    assert svc._index.compaction_count == 1
+    routed_search()
+    assert len(builds) == 3
+    # results always reflect the current corpus, never the cached router's
+    res, _ = routed_search()
+    full, _ = svc.search(None, k=3, embeddings=q)
+    assert np.array_equal(np.asarray(res.ids), np.asarray(full.ids))
+
+
+def test_plan_trace_counter_flat_across_warm_searches():
+    """The per-plan trace-counter spy: repeated searches on a fixed corpus
+    reuse compiled part kernels (no new traces), and corpus growth with
+    equal-shaped segments stays on the cached kernels too."""
+    rng = np.random.default_rng(4)
+    pts = rng.standard_normal((96, 6)).astype(np.float32)
+    svc = RetrievalService(embed_fn=np.asarray, m_override=8, max_segments=8)
+    svc.add(list(range(48)), embeddings=pts[:48])
+    q = pts[:4] + 0.01
+    svc.search(None, k=3, embeddings=q)                    # warm
+    before = sum(plan_lib._TRACE_COUNTS.values())
+    for _ in range(3):
+        svc.search(None, k=3, embeddings=q)
+    assert sum(plan_lib._TRACE_COUNTS.values()) == before  # all cache hits
+    svc.add(list(range(48, 96)), embeddings=pts[48:])      # same 48-row shape
+    svc.search(None, k=3, embeddings=q)
+    assert sum(plan_lib._TRACE_COUNTS.values()) == before  # shared part kernel
+
+
+def test_sharded_placement_cache_refreshes_on_churn():
+    """Mesh-backed tenant: the sharded placement is reused across searches
+    and rebuilt exactly when the corpus fingerprint changes."""
+    import jax
+
+    from repro.launch import mesh as mesh_lib
+
+    mesh = mesh_lib.make_mesh((1,), ("data",))
+    rng = np.random.default_rng(5)
+    pts = rng.standard_normal((64, 6)).astype(np.float32)
+    fe = ServingFrontend(mesh=mesh, max_wait_us=0)
+    svc = fe.create_tenant("t", embed_fn=np.asarray, m_override=8)
+    fe.add("t", list(range(32)), embeddings=pts[:32])
+    q = pts[:3] + 0.01
+
+    res1, _ = fe.search("t", None, k=3, embeddings=q)
+    placed1 = svc._placed
+    res2, _ = fe.search("t", None, k=3, embeddings=q)
+    assert svc._placed is placed1            # cache hit: same placement tuple
+    assert np.array_equal(np.asarray(res1.ids), np.asarray(res2.ids))
+    fe.add("t", list(range(32, 64)), embeddings=pts[32:])
+    res3, _ = fe.search("t", None, k=3, embeddings=q)
+    assert svc._placed is not placed1        # fingerprint change -> re-place
+    # and the new placement serves the grown corpus: parity with a fresh
+    # single-device service over the same corpus
+    ref = RetrievalService(embed_fn=np.asarray, m_override=8)
+    ref.add(list(range(32)), embeddings=pts[:32])
+    ref.add(list(range(32, 64)), embeddings=pts[32:])
+    expect, _ = ref.search(None, k=3, embeddings=q)
+    assert np.array_equal(np.asarray(expect.ids), np.asarray(res3.ids))
+    assert np.array_equal(np.asarray(expect.counts), np.asarray(res3.counts))
+    fe.close()
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_percentile_nearest_rank():
+    assert percentile([], 50) == 0.0
+    assert percentile([5.0], 99) == 5.0
+    xs = list(range(1, 101))
+    assert percentile(xs, 50) == 51          # nearest rank on 100 samples
+    assert percentile(xs, 99) == 99
+    with pytest.raises(ValueError):
+        percentile(xs, 101)
+
+
+def test_metrics_snapshot_schema_and_ratios():
+    m = FrontendMetrics(window=16)
+    for _ in range(4):
+        m.record_submit("a", 8)
+    m.record_shed("a")
+    m.record_dispatch(n_requests=4, n_queries=32)
+    for lat in (0.010, 0.020, 0.030, 0.040):
+        m.record_completion("a", lat)
+    m.record_queue_depth(3)
+    m.record_queue_depth(1)
+    snap = m.snapshot()
+    assert snap["coalesce_ratio"] == 4.0
+    assert snap["batch_occupancy"] == 32.0
+    assert snap["queue_depth"] == 1 and snap["queue_high_water"] == 3
+    t = snap["tenants"]["a"]
+    assert t["submitted"] == 4 and t["shed"] == 1 and t["completed"] == 4
+    assert t["p50_ms"] == pytest.approx(30.0)   # nearest rank of 4 samples
+    assert 0 < t["p50_ms"] <= t["p99_ms"]
+    m.forget_tenant("a")
+    assert "a" not in m.snapshot()["tenants"]

@@ -24,6 +24,9 @@ python -m pytest -q -k "not distributed and not sharded_serving" tests/test_plan
 echo "--- routing conformance (ROUTED_VERIFIED == full scan bit-for-bit) ---"
 python -m pytest -q -k "not distributed" tests/test_routing.py
 
+echo "--- serving-frontend parity (coalesced == serial bit-for-bit, 6 engines x routing on/off) ---"
+python -m pytest -q -k "parity_matrix or mixed_tenants" tests/test_frontend.py
+
 if [[ "${1:-}" == "--fast" ]]; then
     # (tests/test_plan.py's fast, non-subprocess lane already ran above)
     python -m pytest -x -q \
@@ -42,6 +45,9 @@ PYTHONPATH=".:$PYTHONPATH" python benchmarks/bench_add_throughput.py
 
 echo "--- serve-latency micro-benchmark (BENCH JSON; cached vs uncached plan) ---"
 PYTHONPATH=".:$PYTHONPATH" python benchmarks/bench_serve_latency.py
+
+echo "--- frontend-throughput benchmark (BENCH JSON; batched >= 2x serial gate) ---"
+PYTHONPATH=".:$PYTHONPATH" python benchmarks/bench_frontend.py
 
 echo "--- signature-storage roofline (BENCH JSON; packed <= wide/4 gate) ---"
 PYTHONPATH=".:$PYTHONPATH" python benchmarks/roofline.py

@@ -4,8 +4,13 @@ counts[q, n] = sum_v query_bin[q, v] * data_bin[n, v]
 
 The short-document model (paper section V-B): MC == inner product of binary
 word vectors.  Unlike the VPU compare kernels this one rides the MXU -- a
-classic tiled matmul with bf16 inputs and f32 accumulation across the V grid
-axis, giving the compute-bound roofline corner of the engine family.
+classic tiled matmul with bf16 {0,1} inputs, giving the compute-bound
+roofline corner of the engine family.  Each V grid step's partial dot lies
+in [0, tile_v] -- exact in f32 -- and is cast to int32 before accumulating
+into the output tile, so the kernel emits exact int32 counts with no f32
+magnitude bound on V (the registry's count-dtype policy; the old f32
+accumulator + post-hoc round capped exactness at 2^24, the same drift the
+cosine kernel shed in PR 6).
 """
 from __future__ import annotations
 
@@ -25,9 +30,9 @@ def _ip_kernel(q_ref, d_ref, o_ref):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    o_ref[...] += jnp.dot(
-        q_ref[...], d_ref[...].T, preferred_element_type=jnp.float32
-    )
+    # per-step dot <= tile_v in magnitude: exact in f32, lossless int32 cast
+    step = jnp.dot(q_ref[...], d_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] += step.astype(jnp.int32)
 
 
 def ip_count_pallas(
@@ -39,7 +44,7 @@ def ip_count_pallas(
     tile_v: int = TILE_V,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Returns f32 [Q, N] (ops.py rounds to int32).  Inputs bf16/f32 {0,1}."""
+    """Returns exact int32 [Q, N] counts.  Inputs bf16/f32/int {0,1}."""
     qn, v = query_bin.shape
     nn = data_bin.shape[0]
     assert qn % tile_q == 0 and nn % tile_n == 0 and v % tile_v == 0
@@ -52,6 +57,6 @@ def ip_count_pallas(
             pl.BlockSpec((tile_n, tile_v), lambda i, j, k: (j, k)),
         ],
         out_specs=pl.BlockSpec((tile_q, tile_n), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((qn, nn), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((qn, nn), jnp.int32),
         interpret=interpret,
     )(query_bin.astype(jnp.bfloat16), data_bin.astype(jnp.bfloat16))

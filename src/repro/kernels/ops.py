@@ -113,7 +113,8 @@ def ip_count(
     tile_v: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """IP engine kernel: counts int32 [Q, N] (exact for counts < 2^24)."""
+    """IP engine kernel: exact int32 counts [Q, N] (per-tile int32
+    accumulation; no f32 magnitude bound)."""
     qn, v = query_bin.shape
     nn = data_bin.shape[0]
     tq, tn = _tiles(qn, nn, tile_q or _ip.TILE_Q, tile_n or _ip.TILE_N)
@@ -123,7 +124,7 @@ def ip_count(
     out = _ip.ip_count_pallas(
         d, q, tile_q=tq, tile_n=tn, tile_v=tv, interpret=common.use_interpret(interpret)
     )
-    return jnp.round(out[:qn, :nn]).astype(jnp.int32)
+    return out[:qn, :nn]
 
 
 @functools.partial(jax.jit, static_argnames=("tile_q", "tile_n", "tile_m", "interpret"))

@@ -35,18 +35,18 @@ def main() -> None:
 
     docs = synthetic_documents(args.n_docs, seed=0)
     svc = RetrievalService(embed_fn=embed, m_override=128, n_buckets=1024)
-    t0 = time.time()
+    t0 = time.perf_counter()
     svc.add(docs)
-    print(f"indexed {args.n_docs} docs in {time.time()-t0:.2f}s")
+    print(f"indexed {args.n_docs} docs in {time.perf_counter()-t0:.2f}s")
 
     total, hits = 0, 0
-    t0 = time.time()
+    t0 = time.perf_counter()
     for b in range(args.batches):
         ids = (np.arange(args.n_queries) * 7 + b) % args.n_docs
         res, _ = svc.search([docs[i] for i in ids], k=args.k)
         hits += int(np.sum(np.asarray(res.ids)[:, 0] == ids))
         total += args.n_queries
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"{total} queries in {dt:.2f}s -> {total/dt:.0f} qps; "
           f"top-1 self-retrieval {hits/total:.3f}")
 

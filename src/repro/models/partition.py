@@ -44,7 +44,10 @@ def tp_policy(use_tp: bool):
 def _mesh_axes() -> Optional[dict]:
     try:
         am = jax.sharding.get_abstract_mesh()
-    except Exception:
+    except (AttributeError, RuntimeError):
+        # AttributeError: this jax predates get_abstract_mesh (the live path
+        # on 0.4.x); RuntimeError: no mesh context is active.  Either way
+        # there is no mesh to partition over -- fall back to replicated.
         return None
     names = getattr(am, "axis_names", ())
     if not names:

@@ -401,6 +401,11 @@ class ServingFrontend:
                 req.future.set_result((out, rsims))
                 lo = hi
             self._metrics.record_dispatch(len(group), lo)
+        # Scatter boundary: whatever a dispatch raises (including
+        # KeyboardInterrupt mid-device-call) must resolve the group's
+        # futures exceptionally -- a dead dispatch loop would hang every
+        # waiting caller forever.
+        # genielint: ignore[broad-except]
         except BaseException as e:  # noqa: BLE001 -- scatter, don't die
             for req in group:
                 if not req.future.done():

@@ -86,18 +86,11 @@ def test_planner_layout_parity(engine, method):
             f"{engine.value} {method.value} {layout} threshold"
 
 
-def test_planner_is_the_only_selector():
-    """The consolidation grep: select_topk / merge_ragged / pad-mask calls
-    appear only inside the executor module (core/plan.py); the four legacy
-    entry-point modules delegate instead of re-deriving the invariants."""
-    core = os.path.join(_SRC, "repro", "core")
-    for mod in ("index.py", "segments.py", "multiload.py", "distributed.py"):
-        with open(os.path.join(core, mod)) as f:
-            src = f.read()
-        for needle in ("select_topk(", "merge_ragged(", "_mask_pad_counts(",
-                       "merge_topk("):
-            assert needle not in src, f"{mod} still calls {needle[:-1]}"
-        assert "plan" in src, f"{mod} does not delegate to the planner"
+# The old test_planner_is_the_only_selector string-grep lived here; the
+# invariant is now enforced repo-wide by genielint's executor-sovereignty
+# rule (real call-site analysis over every module under src/, not a
+# substring scan of four files) -- see tools/genielint/rules_spine.py and
+# tests/test_lint.py::test_executor_sovereignty_at_head.
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,12 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+# First lane: static contracts.  Pure-AST (no jax import), so a spine/kernel/
+# lock/hygiene violation fails in milliseconds before any device work.
+# Contracts + suppression syntax: docs/CONTRACTS.md.
+echo "--- genielint (static invariants; docs/CONTRACTS.md) ---"
+PYTHONPATH=".:$PYTHONPATH" python -m tools.genielint --json reports/lint.json
+
 # Fast lane: the engine x {reference,kernel} x {search,multiload} conformance
 # matrix runs first so an engine-contract break fails in minutes (the
 # distributed leg needs a multi-device subprocess and runs with the suite).

@@ -1,0 +1,19 @@
+"""genielint: AST-based invariant checker for the GENIE codebase.
+
+The contracts GENIE's correctness rests on -- one selection path through the
+executor, sound Pallas kernel tiling/dtypes, retrace-free executor code,
+lock-guarded serving state, monotonic duration clocks -- are invisible to
+the type system and were previously enforced by parity suites plus one
+string-grep test.  This package enforces them mechanically at the AST level
+so contract drift fails CI in seconds instead of recurring PR-over-PR.
+
+Usage:
+    python -m tools.genielint [--json reports/lint.json] [paths...]
+
+Every enforced invariant is documented in docs/CONTRACTS.md, along with the
+`# genielint: ignore[rule]` suppression syntax and a walkthrough for adding
+new rules.
+"""
+from tools.genielint.config import LintConfig  # noqa: F401
+from tools.genielint.core import (ALL_RULES, Finding, lint_file,  # noqa: F401
+                                  run_lint)

@@ -1,0 +1,79 @@
+"""CLI: ``python -m tools.genielint [--json reports/lint.json] [paths...]``.
+
+Lints every .py under ``src/`` (or just the given paths, resolved against
+the scan root) with all registered rules.  Prints one line per finding,
+writes the machine-readable report when ``--json`` is given, and exits
+non-zero iff any finding is unsuppressed -- so the CI lane (tools/ci.sh,
+first lane) fails fast on a contract violation before any device work.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+
+from tools.genielint.config import DEFAULT
+from tools.genielint.core import ALL_RULES, _load_rules, run_lint, write_json
+
+_REPO = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+def main(argv=None) -> int:
+    _load_rules()
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.genielint",
+        description="AST-based invariant checker for the "
+                    "registry->planner->executor spine, Pallas kernel "
+                    "contracts, and serving lock discipline "
+                    "(docs/CONTRACTS.md).")
+    ap.add_argument("paths", nargs="*",
+                    help="files to lint (relative to --root); default: "
+                         "every .py under --root")
+    ap.add_argument("--root", default=os.path.join(_REPO, "src"),
+                    help="scan root; rule scopes are paths relative to it "
+                         "(default: <repo>/src)")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="also write the findings report to this path")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated subset of rules to run "
+                         f"(available: {', '.join(sorted(ALL_RULES))})")
+    ap.add_argument("--vmem-budget-mb", type=float, default=None,
+                    help="override the pallas-kernel-contract VMEM tile "
+                         "budget (default: "
+                         f"{DEFAULT.vmem_budget_bytes // (1024 * 1024)} MiB)")
+    args = ap.parse_args(argv)
+
+    config = DEFAULT
+    if args.vmem_budget_mb is not None:
+        config = dataclasses.replace(
+            config, vmem_budget_bytes=int(args.vmem_budget_mb * 1024 * 1024))
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = sorted(set(rules) - set(ALL_RULES))
+        if unknown:
+            ap.error(f"unknown rule(s): {', '.join(unknown)} "
+                     f"(available: {', '.join(sorted(ALL_RULES))})")
+
+    findings = run_lint(args.root, files=args.paths or None,
+                        config=config, rules=rules)
+    for f in findings:
+        print(f.format())
+    if args.json_path:
+        write_json(findings, args.json_path)
+
+    unsuppressed = [f for f in findings if not f.suppressed]
+    n_sup = len(findings) - len(unsuppressed)
+    tail = f" ({n_sup} suppressed)" if n_sup else ""
+    if unsuppressed:
+        print(f"genielint: {len(unsuppressed)} finding(s){tail}")
+        return 1
+    print(f"genielint: clean{tail} "
+          f"({len(rules or ALL_RULES)} rules)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,230 @@
+"""The genielint rule engine: parse once, run every rule, apply suppressions.
+
+Pure standard library -- the linter never imports jax or repro, so the CI
+lane costs milliseconds and runs before any device/toolchain setup.
+
+A rule is a callable ``rule(module: LintModule, config: LintConfig) ->
+Iterable[Finding]`` registered in ``ALL_RULES``.  Findings landing on a line
+with an inline ``# genielint: ignore[rule-a,rule-b]`` directive (or whose
+immediately preceding line is a comment carrying one) are reported as
+suppressed and do not fail the run.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Callable, Iterable, Optional
+
+from tools.genielint.config import DEFAULT, LintConfig
+
+_IGNORE_RE = re.compile(r"#\s*genielint:\s*ignore\[([a-z0-9\-_,\s]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation at a source location."""
+
+    rule: str
+    path: str        # repo-relative POSIX path (e.g. repro/core/plan.py)
+    line: int        # 1-based
+    col: int         # 0-based
+    message: str
+    suppressed: bool = False
+
+    def format(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}: " \
+               f"{self.message}{tag}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class LintModule:
+    """One parsed source file plus its suppression directives."""
+
+    def __init__(self, path: str, relpath: str, source: str):
+        self.path = path
+        self.relpath = relpath.replace(os.sep, "/")
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.lines = source.splitlines()
+        # line number -> set of rule names ignored on that line
+        self.ignores: dict[int, set[str]] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = _IGNORE_RE.search(text)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+                self.ignores[i] = rules
+
+    def is_suppressed(self, rule: str, line: int) -> bool:
+        """A finding is suppressed by a directive on its own line, or by a
+        comment-only line directly above it (for lines too long to annotate
+        in place)."""
+        if rule in self.ignores.get(line, ()):
+            return True
+        prev = line - 1
+        if rule in self.ignores.get(prev, ()):
+            text = self.lines[prev - 1].strip() if 0 < prev <= len(self.lines) else ""
+            return text.startswith("#")
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Shared AST helpers used by the rule modules
+# ---------------------------------------------------------------------------
+
+def call_name(node: ast.Call) -> Optional[str]:
+    """Terminal name of a call: ``f(...)`` -> "f", ``a.b.f(...)`` -> "f"."""
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """Full dotted path of a Name/Attribute chain, or None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def const_resolver(env: dict):
+    """Fold an expression of ints over `env` (Name -> int) to a constant.
+
+    Supports the arithmetic that appears in kernel shape math (+ - * // %);
+    returns None when any leaf is unknown -- callers substitute a documented
+    conservative assumption instead of guessing silently."""
+
+    def resolve(node: ast.AST) -> Optional[int]:
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return node.value
+        if isinstance(node, ast.Name):
+            return env.get(node.id)
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            v = resolve(node.operand)
+            return None if v is None else -v
+        if isinstance(node, ast.BinOp):
+            a, b = resolve(node.left), resolve(node.right)
+            if a is None or b is None:
+                return None
+            if isinstance(node.op, ast.Add):
+                return a + b
+            if isinstance(node.op, ast.Sub):
+                return a - b
+            if isinstance(node.op, ast.Mult):
+                return a * b
+            if isinstance(node.op, ast.FloorDiv):
+                return a // b if b else None
+            if isinstance(node.op, ast.Mod):
+                return a % b if b else None
+            if isinstance(node.op, ast.Pow):
+                return a ** b if 0 <= b < 64 else None
+        return None
+
+    return resolve
+
+
+def parent_map(tree: ast.AST) -> dict:
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+# ---------------------------------------------------------------------------
+# Registry + runner
+# ---------------------------------------------------------------------------
+
+Rule = Callable[[LintModule, LintConfig], Iterable[Finding]]
+ALL_RULES: dict[str, Rule] = {}
+
+
+def register(name: str):
+    def deco(fn: Rule) -> Rule:
+        ALL_RULES[name] = fn
+        return fn
+    return deco
+
+
+# importing the rule modules populates ALL_RULES (import at module bottom so
+# the rules can import the helpers above without a cycle)
+def _load_rules() -> None:
+    from tools.genielint import (rules_hygiene, rules_locks,  # noqa: F401
+                                 rules_pallas, rules_retrace, rules_spine)
+
+
+def iter_py_files(root: str) -> list[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                out.append(os.path.join(dirpath, fn))
+    return out
+
+
+def lint_file(path: str, relpath: str,
+              config: LintConfig = DEFAULT,
+              rules: Optional[Iterable[str]] = None) -> list[Finding]:
+    """Run the (selected) rules over one file, suppressions applied."""
+    _load_rules()
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    try:
+        module = LintModule(path, relpath, source)
+    except SyntaxError as e:
+        return [Finding(rule="parse-error", path=relpath,
+                        line=e.lineno or 1, col=e.offset or 0,
+                        message=f"cannot parse: {e.msg}")]
+    names = list(rules) if rules is not None else list(ALL_RULES)
+    findings: list[Finding] = []
+    for name in names:
+        for f_ in ALL_RULES[name](module, config):
+            if module.is_suppressed(f_.rule, f_.line):
+                f_ = dataclasses.replace(f_, suppressed=True)
+            findings.append(f_)
+    findings.sort(key=lambda f_: (f_.path, f_.line, f_.col, f_.rule))
+    return findings
+
+
+def run_lint(root: str, files: Optional[Iterable[str]] = None,
+             config: LintConfig = DEFAULT,
+             rules: Optional[Iterable[str]] = None) -> list[Finding]:
+    """Lint every .py under `root` (or just `files`, resolved against it).
+
+    Rule scopes match on paths relative to `root`, so fixtures laid out
+    under a temp root (tests/test_lint.py) see exactly the production
+    scoping."""
+    paths = [os.path.join(root, f) if not os.path.isabs(f) else f
+             for f in files] if files is not None else iter_py_files(root)
+    findings: list[Finding] = []
+    for path in paths:
+        rel = os.path.relpath(path, root)
+        findings.extend(lint_file(path, rel, config=config, rules=rules))
+    findings.sort(key=lambda f_: (f_.path, f_.line, f_.col, f_.rule))
+    return findings
+
+
+def write_json(findings: list[Finding], path: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    unsuppressed = [f_ for f_ in findings if not f_.suppressed]
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(dict(
+            tool="genielint",
+            findings=[f_.to_json() for f_ in findings],
+            n_findings=len(findings),
+            n_unsuppressed=len(unsuppressed),
+            ok=not unsuppressed,
+        ), f, indent=1)

@@ -1,0 +1,83 @@
+"""Rules: wall-clock and broad-except.
+
+wall-clock
+    ``time.time()`` is wall-clock: NTP steps it, VMs freeze it, and a
+    duration computed from two wall-clock reads can come out negative.
+    Every duration in the repo (benchmarks, dry-run cost probes, serving
+    latencies) must use ``time.perf_counter()``.  The one carve-out is
+    runtime/fault_tolerance.py (config.wall_clock_allow): its heartbeat
+    deadlines are compared *across processes*, and perf_counter's epoch is
+    process-local -- wall-clock is the design there, not an accident.
+
+broad-except
+    ``except Exception`` / ``except BaseException`` / bare ``except``
+    swallow the bug along with the failure.  Handlers must name the
+    failures they expect (the narrowed partition.py and dryrun.py handlers
+    are the worked examples).  A catch-all that is genuinely the design --
+    a dispatch loop that must scatter errors to futures rather than die, a
+    record-the-bug-loudly boundary -- carries an inline
+    ``# genielint: ignore[broad-except]`` at the site, where the
+    justification lives next to the code.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from tools.genielint.config import LintConfig
+from tools.genielint.core import (Finding, LintModule, dotted_name,
+                                  register)
+
+_BROAD = {"Exception", "BaseException"}
+
+
+@register("wall-clock")
+def check_wall_clock(module: LintModule,
+                     config: LintConfig) -> Iterable[Finding]:
+    if module.relpath in config.wall_clock_allow:
+        return
+    # `from time import time` makes a bare time() call wall-clock too
+    bare_time = any(
+        isinstance(node, ast.ImportFrom) and node.module == "time"
+        and any(alias.name == "time" for alias in node.names)
+        for node in ast.walk(module.tree))
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        if name == "time.time" or (bare_time and name == "time"):
+            yield Finding(
+                rule="wall-clock", path=module.relpath,
+                line=node.lineno, col=node.col_offset,
+                message=("time.time() is wall-clock (NTP can step it; "
+                         "deltas can go negative) -- use "
+                         "time.perf_counter() for durations; cross-process "
+                         "deadlines belong in runtime/fault_tolerance.py"))
+
+
+@register("broad-except")
+def check_broad_except(module: LintModule,
+                       config: LintConfig) -> Iterable[Finding]:
+    if module.relpath in config.broad_except_allow:
+        return
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None:
+            caught = "bare except"
+        else:
+            types = node.type.elts if isinstance(node.type, ast.Tuple) \
+                else [node.type]
+            broad = [t for t in types
+                     if (dotted_name(t) or "").split(".")[-1] in _BROAD]
+            if not broad:
+                continue
+            caught = f"except {dotted_name(broad[0])}"
+        yield Finding(
+            rule="broad-except", path=module.relpath,
+            line=node.lineno, col=node.col_offset,
+            message=(f"{caught} swallows bugs along with the expected "
+                     f"failure: name the exceptions this boundary "
+                     f"anticipates, or -- if catching everything IS the "
+                     f"design -- justify it at the site with "
+                     f"# genielint: ignore[broad-except]"))

@@ -1,0 +1,192 @@
+"""Rule: lock-discipline.
+
+The serving front-end (serve/frontend.py, scheduler.py, metrics.py) shares
+mutable registry/queue/counter state across the caller threads and the
+dispatch loop.  The discipline is simple and checkable: an attribute that is
+ever *written* under ``with self.<lock>`` is lock-guarded, and lock-guarded
+attributes must never be touched -- read or written -- outside a lock
+region (``__init__``/``__post_init__`` run before the object is shared and
+are exempt).
+
+What counts as a write: ``self.a = ...`` / ``self.a += ...``, subscript
+stores ``self.a[k] = ...``, and container-mutator method calls
+(``self.a.append(...)``, ``.pop()``, ``.update()``, ...).  Plain method
+calls on an attribute (``self._hb.beat(slot)``) are not writes -- the
+binding ``self._hb`` itself never changes and the callee owns its own
+synchronisation.
+
+Lock-private helpers: a private method whose every intra-class call site
+sits inside a lock region inherits the locked context (the fixpoint covers
+helpers calling helpers).  This keeps ``FrontendMetrics._tenant`` -- which
+writes ``self._tenants`` in its own body but is only ever invoked under
+``self._lock`` -- legal without an allowlist entry.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterable, Optional
+
+from tools.genielint.config import LintConfig
+from tools.genielint.core import Finding, LintModule, register
+
+RULE = "lock-discipline"
+
+# Mutating container methods: calling one of these on `self.attr` writes the
+# guarded state even though `self.attr` itself is only read.
+_MUTATORS = {
+    "append", "appendleft", "extend", "extendleft", "insert",
+    "pop", "popleft", "popitem", "remove", "discard", "clear",
+    "update", "setdefault", "add",
+}
+_EXEMPT_METHODS = {"__init__", "__post_init__"}
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name) \
+            and node.value.id == "self":
+        return node.attr
+    return None
+
+
+@dataclasses.dataclass
+class _Access:
+    attr: str
+    node: ast.AST
+    method: str
+    locked: bool          # lexically inside `with self.<lock>`
+    lock: Optional[str]   # which lock, when locked
+    write: bool
+
+
+@dataclasses.dataclass
+class _CallSite:
+    callee: str
+    method: str
+    locked: bool
+    node: ast.AST
+
+
+class _ClassScan:
+    """One pass over a class body: lock attrs, accesses, intra-class calls."""
+
+    def __init__(self, cls: ast.ClassDef):
+        self.methods = {n.name: n for n in cls.body
+                        if isinstance(n, ast.FunctionDef)}
+        self.lock_attrs: set[str] = set()
+        self.accesses: list[_Access] = []
+        self.calls: list[_CallSite] = []
+        for fn in self.methods.values():
+            for node in ast.walk(fn):
+                if isinstance(node, ast.With):
+                    for item in node.items:
+                        attr = _self_attr(item.context_expr)
+                        if attr:
+                            self.lock_attrs.add(attr)
+        for name, fn in self.methods.items():
+            for stmt in fn.body:
+                self._visit(stmt, name, locked=False, lock=None)
+
+    def _visit(self, node: ast.AST, method: str, locked: bool,
+               lock: Optional[str]) -> None:
+        if isinstance(node, ast.With):
+            held = [a for item in node.items
+                    if (a := _self_attr(item.context_expr))
+                    and a in self.lock_attrs]
+            for item in node.items:
+                self._visit(item.context_expr, method, locked, lock)
+            inner = locked or bool(held)
+            inner_lock = held[0] if held else lock
+            for stmt in node.body:
+                self._visit(stmt, method, inner, inner_lock)
+            return
+        # nested defs inherit the lexical lock context (closures created
+        # under the lock may escape it, but none do in the serving layer;
+        # a false negative here is acceptable, a false positive is not)
+        self._record(node, method, locked, lock)
+        for child in ast.iter_child_nodes(node):
+            self._visit(child, method, locked, lock)
+
+    def _record(self, node: ast.AST, method: str, locked: bool,
+                lock: Optional[str]) -> None:
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for tgt in targets:
+                attr = _self_attr(tgt)
+                if attr is None and isinstance(tgt, ast.Subscript):
+                    attr = _self_attr(tgt.value)
+                if attr:
+                    self.accesses.append(_Access(attr, node, method, locked,
+                                                 lock, write=True))
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+            base = _self_attr(node.func.value)
+            if base and node.func.attr in _MUTATORS:
+                self.accesses.append(_Access(base, node, method, locked,
+                                             lock, write=True))
+            # intra-class call: self.helper(...)
+            owner = _self_attr(node.func)
+            if owner in self.methods:
+                self.calls.append(_CallSite(owner, method, locked, node))
+        if isinstance(node, ast.Attribute) and isinstance(node.ctx, ast.Load):
+            attr = _self_attr(node)
+            if attr:
+                self.accesses.append(_Access(attr, node, method, locked,
+                                             lock, write=False))
+
+    def locked_methods(self) -> set[str]:
+        """Fixpoint: private methods whose every intra-class call site is in
+        a locked context (lexically, or via an already-locked caller)."""
+        locked: set[str] = set()
+        while True:
+            grown = set(locked)
+            for name in self.methods:
+                if not name.startswith("_") or name in locked:
+                    continue
+                sites = [c for c in self.calls if c.callee == name]
+                if sites and all(c.locked or c.method in locked
+                                 for c in sites):
+                    grown.add(name)
+            if grown == locked:
+                return locked
+            locked = grown
+
+
+@register(RULE)
+def check(module: LintModule, config: LintConfig) -> Iterable[Finding]:
+    if module.relpath not in config.lock_modules:
+        return
+    for cls in [n for n in ast.walk(module.tree)
+                if isinstance(n, ast.ClassDef)]:
+        scan = _ClassScan(cls)
+        if not scan.lock_attrs:
+            continue
+        locked_methods = scan.locked_methods()
+
+        def effective(a: _Access) -> bool:
+            return a.locked or a.method in locked_methods
+
+        guarded: dict[str, str] = {}    # attr -> the lock that guards it
+        for a in scan.accesses:
+            if a.write and effective(a) and a.method not in _EXEMPT_METHODS \
+                    and a.attr not in scan.lock_attrs:
+                guarded.setdefault(a.attr, a.lock or
+                                   sorted(scan.lock_attrs)[0])
+        seen: set[tuple] = set()
+        for a in scan.accesses:
+            if a.attr not in guarded or effective(a) \
+                    or a.method in _EXEMPT_METHODS:
+                continue
+            key = (a.attr, a.node.lineno, a.node.col_offset)
+            if key in seen:
+                continue
+            seen.add(key)
+            verb = "written" if a.write else "read"
+            yield Finding(
+                rule=RULE, path=module.relpath,
+                line=a.node.lineno, col=a.node.col_offset,
+                message=(f"self.{a.attr} is {verb} in "
+                         f"{cls.name}.{a.method}() without holding "
+                         f"self.{guarded[a.attr]} -- it is written under "
+                         f"that lock elsewhere, so every access must hold "
+                         f"it (or move into a lock-private helper)"))

@@ -1,0 +1,234 @@
+"""Rule: retrace-hygiene.
+
+The executor (core/plan.py) and the Pallas kernel modules are the hot,
+trace-once code: a stray Python coercion or branch on a traced value either
+crashes (ConcretizationTypeError) or -- worse -- silently bakes a
+data-dependent constant into the compiled program.  And the plan cache is
+only sound if a `QueryPlan`'s identity captures everything that changes the
+compiled shape.  Three checks:
+
+  1. `int()` / `float()` / `bool()` coercions inside jitted/kernel function
+     bodies are flagged unless the argument is static shape math
+     (contains `.shape`) or a literal.
+  2. `if` / `while` tests referencing a jitted function's own parameters
+     (the traced operands) are flagged; `x is None` / `x is not None` tests
+     stay legal (operand *presence* is static at trace time).
+  3. `QueryPlan` must stay a frozen dataclass (the plan IS the
+     executable-cache key), no field may opt out via
+     ``field(hash=False/compare=False)``, and every field must surface in
+     `describe()` -- either verbatim or through a documented derived key
+     (config.describe_derived) -- so cost reports never hide a cache axis.
+
+Traced functions are discovered, not declared: defs decorated with
+``jax.jit`` / ``functools.partial(jax.jit, ...)``, defs passed to
+``jax.jit(fn)``, and kernel bodies handed to ``pl.pallas_call`` (directly or
+through ``functools.partial``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from tools.genielint.config import LintConfig
+from tools.genielint.core import (Finding, LintModule, call_name,
+                                  dotted_name, register)
+
+RULE = "retrace-hygiene"
+_COERCIONS = {"int", "float", "bool"}
+
+
+def _in_scope(module: LintModule, config: LintConfig) -> bool:
+    return (module.relpath in config.traced_modules
+            or module.relpath.startswith(tuple(config.traced_prefixes)))
+
+
+# ---------------------------------------------------------------------------
+# Traced-function discovery
+# ---------------------------------------------------------------------------
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """jax.jit, or functools.partial(jax.jit, ...)."""
+    name = dotted_name(node)
+    if name in ("jax.jit", "jit"):
+        return True
+    if isinstance(node, ast.Call) and call_name(node) == "partial" and node.args:
+        return dotted_name(node.args[0]) in ("jax.jit", "jit")
+    return False
+
+
+def _partial_target(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Call) and call_name(node) == "partial" and node.args:
+        return dotted_name(node.args[0])
+    return None
+
+
+def traced_function_names(tree: ast.AST) -> set[str]:
+    names: set[str] = set()
+    # local name -> wrapped function name, for `kernel = partial(_f, ...)`
+    partial_of: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            target = _partial_target(node.value)
+            if target:
+                partial_of[node.targets[0].id] = target
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_jit_expr(d) for d in node.decorator_list):
+                names.add(node.name)
+        if isinstance(node, ast.Call):
+            fname = dotted_name(node.func)
+            if fname in ("jax.jit", "jit") and node.args \
+                    and isinstance(node.args[0], ast.Name):
+                names.add(node.args[0].id)
+            if fname and fname.endswith("pallas_call") and node.args:
+                first = node.args[0]
+                target = _partial_target(first)
+                if target:
+                    names.add(target)
+                elif isinstance(first, ast.Name):
+                    names.add(partial_of.get(first.id, first.id))
+    return names
+
+
+def _is_none_test(test: ast.AST) -> bool:
+    """`x is None` / `x is not None` (and `not <that>`): static at trace."""
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _is_none_test(test.operand)
+    if isinstance(test, ast.Compare) and len(test.ops) == 1:
+        if isinstance(test.ops[0], (ast.Is, ast.IsNot)):
+            return isinstance(test.comparators[0], ast.Constant) \
+                and test.comparators[0].value is None
+    return False
+
+
+def _mentions_shape(node: ast.AST) -> bool:
+    return any(isinstance(n, ast.Attribute) and n.attr in ("shape", "ndim",
+                                                           "size", "dtype")
+               for n in ast.walk(node))
+
+
+def _check_traced_body(fn: ast.FunctionDef, relpath: str) -> Iterable[Finding]:
+    params = {a.arg for a in fn.args.posonlyargs + fn.args.args
+              + fn.args.kwonlyargs}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in _COERCIONS and node.args:
+            arg = node.args[0]
+            if isinstance(arg, ast.Constant) or _mentions_shape(arg):
+                continue
+            yield Finding(rule=RULE, path=relpath, line=node.lineno,
+                          col=node.col_offset, message=(
+                              f"{node.func.id}() coercion inside traced "
+                              f"function {fn.name!r} concretizes a traced "
+                              f"value (or bakes in a host constant); keep "
+                              f"coercions on the host side of the jit "
+                              f"boundary"))
+        if isinstance(node, (ast.If, ast.While)):
+            if _is_none_test(node.test):
+                continue
+            hit = sorted({n.id for n in ast.walk(node.test)
+                          if isinstance(n, ast.Name) and n.id in params})
+            if hit:
+                yield Finding(rule=RULE, path=relpath, line=node.lineno,
+                              col=node.col_offset, message=(
+                                  f"Python branch on traced parameter(s) "
+                                  f"{', '.join(hit)} inside traced function "
+                                  f"{fn.name!r}; use lax.cond/jnp.where, or "
+                                  f"hoist the decision into the plan"))
+
+
+# ---------------------------------------------------------------------------
+# QueryPlan cache-key / describe() completeness
+# ---------------------------------------------------------------------------
+
+def _dataclass_decorator(cls: ast.ClassDef) -> Optional[ast.AST]:
+    for dec in cls.decorator_list:
+        name = dotted_name(dec.func) if isinstance(dec, ast.Call) \
+            else dotted_name(dec)
+        if name and name.split(".")[-1] == "dataclass":
+            return dec
+    return None
+
+
+def _dec_kw(dec: ast.AST, name: str):
+    if isinstance(dec, ast.Call):
+        for kw in dec.keywords:
+            if kw.arg == name and isinstance(kw.value, ast.Constant):
+                return kw.value.value
+    return None
+
+
+def _describe_keys(cls: ast.ClassDef) -> Optional[set[str]]:
+    for node in cls.body:
+        if isinstance(node, ast.FunctionDef) and node.name == "describe":
+            keys: set[str] = set()
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call) and call_name(sub) == "dict":
+                    keys.update(kw.arg for kw in sub.keywords if kw.arg)
+                if isinstance(sub, ast.Dict):
+                    keys.update(k.value for k in sub.keys
+                                if isinstance(k, ast.Constant)
+                                and isinstance(k.value, str))
+            return keys
+    return None
+
+
+def _check_queryplan(cls: ast.ClassDef, relpath: str,
+                     config: LintConfig) -> Iterable[Finding]:
+    where = dict(path=relpath, line=cls.lineno, col=cls.col_offset)
+    dec = _dataclass_decorator(cls)
+    if dec is None or _dec_kw(dec, "frozen") is not True \
+            or _dec_kw(dec, "eq") is False:
+        yield Finding(rule=RULE, message=(
+            "QueryPlan must be @dataclasses.dataclass(frozen=True): the "
+            "plan object IS the executable-cache key, so it must stay "
+            "hashable with every field participating"), **where)
+
+    fields: list[tuple[str, ast.AnnAssign]] = []
+    for node in cls.body:
+        if isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+            ann = dotted_name(node.annotation) or ""
+            if "ClassVar" in ast.dump(node.annotation) or "ClassVar" in ann:
+                continue
+            fields.append((node.target.id, node))
+
+    for name, node in fields:
+        if isinstance(node.value, ast.Call) \
+                and call_name(node.value) == "field":
+            for kw in node.value.keywords:
+                if kw.arg in ("hash", "compare") \
+                        and isinstance(kw.value, ast.Constant) \
+                        and kw.value.value is False:
+                    yield Finding(rule=RULE, path=relpath, line=node.lineno,
+                                  col=node.col_offset, message=(
+                                      f"QueryPlan field {name!r} opts out of "
+                                      f"the cache key ({kw.arg}=False): two "
+                                      f"plans differing only here would "
+                                      f"collide on one executable"))
+
+    keys = _describe_keys(cls)
+    if keys is None:
+        yield Finding(rule=RULE, message=(
+            "QueryPlan has no describe(); cost reports and dry-runs rely on "
+            "it naming every cache axis"), **where)
+        return
+    for name, node in fields:
+        if name not in keys and name not in config.describe_derived:
+            yield Finding(rule=RULE, path=relpath, line=node.lineno,
+                          col=node.col_offset, message=(
+                              f"QueryPlan field {name!r} missing from "
+                              f"describe() (and not a documented derived "
+                              f"key): every plan-cache axis must be visible "
+                              f"in cost reports"))
+
+
+@register(RULE)
+def check(module: LintModule, config: LintConfig) -> Iterable[Finding]:
+    if not _in_scope(module, config):
+        return
+    traced = traced_function_names(module.tree)
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.FunctionDef) and node.name in traced:
+            yield from _check_traced_body(node, module.relpath)
+        if isinstance(node, ast.ClassDef) and node.name == "QueryPlan":
+            yield from _check_queryplan(node, module.relpath, config)

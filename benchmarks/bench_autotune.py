@@ -1,0 +1,175 @@
+"""Autotuner benchmark: measured tuned-vs-default speedup per engine.
+
+Unlike the other benchmarks (which time the pure-XLA paths, see
+benchmarks/common.py), this one deliberately drives `use_kernel=True`: tile
+knobs exist only on the kernel dispatch path.  On this CPU container the
+kernels run in interpret mode, where per-grid-step overhead dominates -- so
+tile tuning moves real, honestly-measured wall time (fewer, larger grid
+steps), exactly the effect the autotuner exists to capture per machine.
+
+Reports ``BENCH {"name": "autotune", ...}`` with, per engine:
+
+  * the tuner's winning knobs (TunedEntry) for the shape,
+  * an independent head-to-head p50 re-measure of tuned vs default plans,
+  * a bit-for-bit parity check (tuned results must equal default results),
+
+plus a cache round-trip check (save -> reload -> same entry; doctored
+fingerprint -> lookup returns None, i.e. safe fallback to defaults).
+
+Gates (main(), consumed by tools/ci.sh): parity and the round-trip must
+hold, at least one engine must reach speedup >= 1.0, and no engine may
+regress beyond the noise floor.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import Row
+
+DEFAULT_ENGINES = ("minsum", "tanimoto", "cosine")
+
+
+def _bench_engine(name: str, n: int, q: int, k: int, budget: int,
+                  repeats: int, cache) -> dict:
+    import jax.numpy as jnp
+
+    from repro.core import autotune as autotune_lib
+    from repro.core import engines
+    from repro.core import plan as plan_lib
+
+    model = engines.get(name)
+    rng = np.random.default_rng(7)
+    data, queries, mc = model.example(rng, n, q)
+    entry = autotune_lib.tune(model, data, queries, k, mc,
+                              budget=budget, repeats=repeats,
+                              cache=cache, save=False)
+
+    wide = model.prepare_data(data)
+    q_wide = model.prepare_queries(queries)
+    mc = model.resolve_max_count(wide, mc)
+    width = int(wide.shape[1])
+    # part_rows gives plan_search the shape hint the cache lookup buckets
+    # on -- the same way GenieIndex.search plans a monolithic corpus
+    p_default = plan_lib.plan_search(model, k, mc, part_rows=(n,),
+                                     use_kernel=True)
+    p_tuned = plan_lib.plan_search(model, k, mc, part_rows=(n,),
+                                   use_kernel=True,
+                                   autotune=cache, tune_width=width)
+
+    # independent interleaved re-measure (not the tuner's own numbers):
+    # sequential timing on a warming machine biases whichever runs last
+    default_us, tuned_us = autotune_lib.compare_plans(
+        p_default, p_tuned, wide, q_wide, rounds=repeats + 2)
+
+    r0 = plan_lib.execute(p_default, wide, q_wide)
+    r1 = plan_lib.execute(p_tuned, wide, q_wide)
+    parity = bool(jnp.array_equal(r0.ids, r1.ids)
+                  and jnp.array_equal(r0.counts, r1.counts))
+    return dict(
+        engine=name, n=n, q=q, k=k,
+        tile_overrides=dict(p_tuned.tile_overrides),
+        tuner_speedup=round(entry.speedup, 3),
+        default_p50_us=round(default_us, 1),
+        tuned_p50_us=round(tuned_us, 1),
+        speedup=round(default_us / max(tuned_us, 1e-9), 3),
+        parity=parity,
+    )
+
+
+def _cache_roundtrip(cache) -> dict:
+    """save -> reload -> identical entries; wrong fingerprint -> miss."""
+    from repro.core import autotune as autotune_lib
+
+    fd, path = tempfile.mkstemp(suffix=".autotune.json")
+    os.close(fd)
+    try:
+        cache.path = autotune_lib.Path(path)
+        cache.save()
+        reloaded = autotune_lib.AutotuneCache(path)
+        same = (reloaded.entries.keys() == cache.entries.keys() and all(
+            reloaded.entries[k] == cache.entries[k] for k in cache.entries))
+        hits = all(
+            reloaded.lookup(e.engine, e.signature_layout,
+                            e.n_bucket, e.w_bucket) == e
+            for e in cache.entries.values())
+        foreign = autotune_lib.AutotuneCache(path)
+        foreign.fingerprint = {"platform": "not-this-machine"}
+        misses = all(
+            foreign.lookup(e.engine, e.signature_layout,
+                           e.n_bucket, e.w_bucket) is None
+            for e in cache.entries.values())
+        return dict(roundtrip_ok=bool(same and hits),
+                    fingerprint_gate_ok=bool(misses))
+    finally:
+        os.unlink(path)
+
+
+def run(n: int = 8192, q: int = 48, k: int = 10, budget: int = 12,
+        repeats: int = 5, engines_list=DEFAULT_ENGINES) -> list[Row]:
+    from repro.core import autotune as autotune_lib
+
+    cache = autotune_lib.AutotuneCache()
+    per_engine = [_bench_engine(e, n, q, k, budget, repeats, cache)
+                  for e in engines_list]
+    rt = _cache_roundtrip(cache)
+
+    # 10% tolerance: CPU CI wall-times are noisy and the tuner's own
+    # head-to-head already refuses knobs that lose to the defaults
+    regressed = [r["engine"] for r in per_engine
+                 if r["tuned_p50_us"] > r["default_p50_us"] * 1.10]
+    report = dict(
+        name="autotune",
+        fingerprint=autotune_lib.hardware_fingerprint(),
+        budget=budget,
+        engines=per_engine,
+        engines_ge_1p0=sum(1 for r in per_engine
+                           if max(r["speedup"], r["tuner_speedup"]) >= 1.0),
+        engines_ge_1p15=sum(1 for r in per_engine if r["speedup"] >= 1.15),
+        regressed=regressed,
+        parity_ok=all(r["parity"] for r in per_engine),
+        **rt,
+    )
+    print("BENCH " + json.dumps(report), flush=True)
+    _LAST_REPORT.update(report)
+    return [
+        Row(f"autotune.{r['engine']}", r["tuned_p50_us"],
+            f"speedup={r['speedup']} tiles={r['tile_overrides']}")
+        for r in per_engine
+    ]
+
+
+_LAST_REPORT: dict = {}
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8192)
+    ap.add_argument("--q", type=int, default=48)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--budget", type=int, default=12)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--engines", default=",".join(DEFAULT_ENGINES))
+    args = ap.parse_args()
+    for r in run(n=args.n, q=args.q, k=args.k, budget=args.budget,
+                 repeats=args.repeats,
+                 engines_list=tuple(args.engines.split(","))):
+        print(r.csv())
+    rep = _LAST_REPORT
+    if not rep.get("parity_ok"):
+        raise SystemExit("autotune parity violated: tuned != default results")
+    if not (rep.get("roundtrip_ok") and rep.get("fingerprint_gate_ok")):
+        raise SystemExit("autotune cache round-trip / fingerprint gate failed")
+    if rep.get("engines_ge_1p0", 0) < 1:
+        raise SystemExit("autotune found no engine with tuned >= 1.0x default")
+    if rep.get("regressed"):
+        raise SystemExit(f"autotuned plans regressed: {rep['regressed']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,60 +1,102 @@
-"""Hillclimb measurement harness: lower ONE cell (small-depth, scan-unrolled)
-and report per-layer-unit collective/flops/bytes + full-cell memory.
+"""Plan pricer CLI: measure or lower-and-cost one retrieval plan.
 
-    PYTHONPATH=src python -m benchmarks.hillclimb --arch grok-1-314b --shape train_4k
+This used to be an LLM-arch lowering harness that hard-coded
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` at import time.
+Its lower-and-cost loop now lives in `core/autotune.price_plan` (the
+autotuner's candidate pricer), this CLI points it at the retrieval spine,
+and the host-device override is opt-in via ``--host-devices``.
+
+    # wall-clock price of one plan (the autotuner's measure mode)
+    PYTHONPATH=src python -m benchmarks.hillclimb --engine eq --n 8192 --q 64 \
+        --use-kernel --tile tile_n=1024
+
+    # XLA cost-model price without executing (the old lower-and-cost loop)
+    PYTHONPATH=src python -m benchmarks.hillclimb --engine cosine --mode lower
+
+    # full greedy autotune of the shape, winner printed as a TunedEntry
+    PYTHONPATH=src python -m benchmarks.hillclimb --engine eq --tune --budget 16
 """
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
-
 import argparse
 import json
-
-import jax
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", default="train_4k")
-    ap.add_argument("--mesh", default="single")
-    ap.add_argument("--full", action="store_true", help="also compile full depth for memory")
+    ap.add_argument("--engine", default="eq")
+    ap.add_argument("--layout", default="wide", choices=["wide", "packed"])
+    ap.add_argument("--n", type=int, default=8192)
+    ap.add_argument("--q", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--mode", default="measure", choices=["measure", "lower"])
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="price the Pallas kernel path (required for --tile)")
+    ap.add_argument("--tile", action="append", default=[], metavar="KNOB=V",
+                    help="tile override, e.g. --tile tile_n=1024 (repeatable)")
+    ap.add_argument("--tune", action="store_true",
+                    help="run the greedy autotuner instead of pricing one plan")
+    ap.add_argument("--budget", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache", default=None,
+                    help="autotune cache JSON to read/write (--tune)")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="opt-in --xla_force_host_platform_device_count "
+                         "(applied before the backend initialises)")
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
 
-    from repro.launch import mesh as mesh_lib
-    from repro.launch import shapes as shapes_lib
-    from repro.launch.dryrun import (
-        _cost_dict, _layer_variants, _lower_lm, _mem_dict, collective_bytes,
-    )
-    from repro.models.registry import get_config
+    import numpy as np
 
-    cfg = get_config(args.arch)
-    mesh = mesh_lib.make_production_mesh(multi_pod=(args.mesh == "multi"))
-    shape = shapes_lib.SHAPES[args.shape]
+    from repro.core import autotune as autotune_lib
+    from repro.core import engines
+    from repro.core import plan as plan_lib
+    from repro.core.types import SignatureLayout
 
-    cfg1, cfg2, units = _layer_variants(cfg)
-    _, c1 = _lower_lm(cfg1, shape, mesh)
-    r1 = dict(cost=_cost_dict(c1.cost_analysis()), coll=collective_bytes(c1.as_text()))
-    _, c2 = _lower_lm(cfg2, shape, mesh)
-    r2 = dict(cost=_cost_dict(c2.cost_analysis()), coll=collective_bytes(c2.as_text()))
+    if args.host_devices is not None:
+        autotune_lib.setup_platform(host_devices=args.host_devices)
 
-    per_layer_coll = {k: (r2["coll"].get(k, 0) - r1["coll"].get(k, 0))
-                      for k in set(r1["coll"]) | set(r2["coll"])}
-    per_layer_flops = r2["cost"]["flops"] - r1["cost"]["flops"]
-    per_layer_bytes = r2["cost"]["bytes_accessed"] - r1["cost"]["bytes_accessed"]
-    total_coll = {k: r1["coll"].get(k, 0) + (units - 1) * v for k, v in per_layer_coll.items()}
+    model = engines.get(args.engine)
+    rng = np.random.default_rng(args.seed)
+    if model.example is None:
+        raise SystemExit(f"engine {args.engine!r} provides no example data")
+    data, queries, mc = model.example(rng, args.n, args.q)
 
-    out = dict(
-        tag=args.tag, arch=args.arch, shape=args.shape, mesh=args.mesh, units=units,
-        per_layer=dict(flops=per_layer_flops, bytes=per_layer_bytes,
-                       collectives_gb={k: round(v / 1e9, 3) for k, v in per_layer_coll.items()}),
-        total_collectives_gb={k: round(v / 1e9, 2) for k, v in total_coll.items()},
-        total_flops=r1["cost"]["flops"] + (units - 1) * per_layer_flops,
-        total_bytes=r1["cost"]["bytes_accessed"] + (units - 1) * per_layer_bytes,
-    )
-    if args.full:
-        _, cf = _lower_lm(cfg, shape, mesh)
-        out["memory"] = _mem_dict(cf.memory_analysis())
+    if args.tune:
+        cache = autotune_lib.AutotuneCache(args.cache)
+        entry = autotune_lib.tune(
+            model, data, queries, args.k, mc,
+            signature_layout=args.layout,
+            budget=args.budget, repeats=args.repeats, cache=cache)
+        out = dict(tag=args.tag, mode="tune", engine=args.engine,
+                   n=args.n, q=args.q, k=args.k,
+                   fingerprint=autotune_lib.hardware_fingerprint(),
+                   entry=entry.to_dict())
+        print(json.dumps(out, indent=1))
+        return
+
+    tiles = {}
+    for item in args.tile:
+        knob, _, value = item.partition("=")
+        if not value:
+            raise SystemExit(f"--tile wants KNOB=VALUE, got {item!r}")
+        tiles[knob] = int(value)
+    if tiles and not args.use_kernel:
+        raise SystemExit("--tile prices the kernel path: add --use-kernel")
+
+    sig_layout = SignatureLayout(args.layout)
+    wide = model.prepare_data(data)
+    mc = model.resolve_max_count(wide, mc)
+    stored = (model.pack_data(wide)
+              if sig_layout is SignatureLayout.PACKED else wide)
+    q_stored = model.prepare_queries_for(queries, sig_layout)
+    plan = plan_lib.plan_search(
+        model, args.k, mc, use_kernel=args.use_kernel,
+        signature_layout=sig_layout, tile_overrides=tiles or None)
+    price = autotune_lib.price_plan(plan, stored, q_stored, mode=args.mode,
+                                    repeats=args.repeats)
+    out = dict(tag=args.tag, engine=args.engine, layout=args.layout,
+               n=args.n, q=args.q, k=args.k, use_kernel=args.use_kernel,
+               tiles=tiles, price=price, plan=plan.describe())
     print(json.dumps(out, indent=1))
 
 

@@ -2,15 +2,65 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (paper-artifact benchmarks),
 then the roofline summary tables when dry-run reports exist.
+
+Every ``BENCH {json}`` line a benchmark prints (the machine-readable report
+convention, e.g. bench_serve_latency / bench_autotune) is mirrored to
+``BENCH_<name>.json`` at the repo root, so the perf trajectory is tracked
+across PRs instead of vanishing with the process stdout.
 """
+import contextlib
+import io
+import json
+import os
 import sys
 import time
 import traceback
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_BENCH_PREFIX = "BENCH "
+
+
+def mirror_bench_line(payload: str, root: str = REPO_ROOT) -> str | None:
+    """Persist one ``BENCH {json}`` payload as BENCH_<name>.json; returns the
+    written path (None for unparseable/nameless payloads -- a report we
+    cannot name is not silently written somewhere surprising)."""
+    try:
+        report = json.loads(payload)
+        name = report["name"]
+    except (json.JSONDecodeError, TypeError, KeyError):
+        return None
+    safe = "".join(c if c.isalnum() or c in "-_" else "_" for c in str(name))
+    path = os.path.join(root, f"BENCH_{safe}.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+class _BenchTee(io.TextIOBase):
+    """stdout passthrough that mirrors BENCH lines to the repo root."""
+
+    def __init__(self, target):
+        self.target = target
+        self._buf = ""
+
+    def write(self, s: str) -> int:
+        self.target.write(s)
+        self._buf += s
+        while "\n" in self._buf:
+            line, self._buf = self._buf.split("\n", 1)
+            if line.startswith(_BENCH_PREFIX):
+                mirror_bench_line(line[len(_BENCH_PREFIX):])
+        return len(s)
+
+    def flush(self) -> None:
+        self.target.flush()
 
 
 def main() -> None:
     from benchmarks import (
         bench_add_throughput,
+        bench_autotune,
         bench_frontend,
         bench_routing,
         bench_serve_latency,
@@ -32,19 +82,23 @@ def main() -> None:
         fig8_num_hash, fig9_multiquery, fig10_datasize, fig12_load_balance,
         table1_profiling, table2_multiload, fig13_cpq, fig14_approx_ratio,
         table5_knn_predict, table6_sequence, bench_add_throughput,
-        bench_serve_latency, bench_frontend, bench_routing, roofline,
+        bench_serve_latency, bench_frontend, bench_routing, bench_autotune,
+        roofline,
     ]
     print("name,us_per_call,derived")
     failures = 0
+    tee = _BenchTee(sys.stdout)
     for mod in modules:
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
-            emit(mod.run())
+            with contextlib.redirect_stdout(tee):
+                emit(mod.run())
         except Exception as e:  # keep the suite running
             failures += 1
             print(f"{mod.__name__}.ERROR,0,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
-        print(f"# {mod.__name__} took {time.time()-t0:.1f}s", file=sys.stderr)
+        print(f"# {mod.__name__} took {time.perf_counter()-t0:.1f}s",
+              file=sys.stderr)
 
     try:
         from benchmarks import roofline

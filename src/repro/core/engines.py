@@ -31,6 +31,51 @@ from repro.core import match as _match
 from repro.core import packing as _packing
 from repro.core.types import Engine, IndexStats, SignatureLayout
 
+# Tile-knob alignment floors (kernels/common.py::pick_tile enforces them at
+# dispatch): tile_q is a sublane dim (8), tile_n / tile_v / tile_m are lane
+# dims (128) -- the TPU min-tile widths every kernel's BlockSpec assumes.
+TILE_ALIGN: dict[str, int] = {
+    "tile_q": 8,
+    "tile_n": 128,
+    "tile_v": 128,
+    "tile_m": 128,
+}
+
+
+def canonical_tile_overrides(tile_overrides) -> tuple[tuple[str, int], ...]:
+    """Normalise a mapping / pair-sequence of tile knobs to the sorted tuple
+    form QueryPlan hashes on, validating names and alignment floors."""
+    if tile_overrides is None:
+        return ()
+    items = (tile_overrides.items() if hasattr(tile_overrides, "items")
+             else tile_overrides)
+    out = []
+    for name, value in items:
+        name = str(name)
+        if name not in TILE_ALIGN:
+            raise ValueError(
+                f"unknown tile knob {name!r}; known knobs: "
+                f"{sorted(TILE_ALIGN)}"
+            )
+        value = int(value)
+        if value < TILE_ALIGN[name]:
+            raise ValueError(
+                f"{name}={value} is below the alignment floor "
+                f"{TILE_ALIGN[name]} (TPU min-tile width); tuned tiles must "
+                f"be >= the floor"
+            )
+        out.append((name, value))
+    if len({n for n, _ in out}) != len(out):
+        raise ValueError(f"duplicate tile knob in {tile_overrides!r}")
+    return tuple(sorted(out))
+
+
+# Tile-bound match callables, memoized so two plans with equal
+# (model, use_kernel, layout, overrides, fused) share ONE callable identity:
+# QueryPlan hashes its match/fused_match fields, so memoisation here is what
+# lets tuned plans hit the executable cache instead of re-tracing per call.
+_TILED_FN_CACHE: dict = {}
+
 
 @dataclasses.dataclass(frozen=True)
 class MatchModel:
@@ -84,6 +129,14 @@ class MatchModel:
     # packed footprint in bytes, computed from the WIDE prepared array
     packed_bytes: Optional[Callable[[jnp.ndarray], int]] = None
 
+    # -- tile knobs (core/autotune.py) --------------------------------------
+    # The tile kwargs each kernel wrapper accepts (kernels/ops.py): the
+    # autotuner's searchable axes for this engine.  Empty => the path takes
+    # no tile overrides (reference fns never do).
+    kernel_tile_knobs: frozenset = frozenset()
+    packed_tile_knobs: frozenset = frozenset()
+    packed_fused_tile_knobs: frozenset = frozenset()
+
     @property
     def supports_packed(self) -> bool:
         return self.pack_data is not None
@@ -103,17 +156,74 @@ class MatchModel:
             return self.packed_pad_value
         return self.pad_value
 
+    def tile_knobs(
+        self,
+        use_kernel: bool,
+        signature_layout: SignatureLayout | str = SignatureLayout.WIDE,
+        fused: bool = False,
+    ) -> frozenset:
+        """The tile knob names this engine's dispatch path accepts."""
+        if not use_kernel:
+            return frozenset()
+        if self.require_layout(signature_layout) is SignatureLayout.PACKED:
+            return (self.packed_fused_tile_knobs if fused
+                    else self.packed_tile_knobs)
+        return self.kernel_tile_knobs
+
+    def _tiled(self, base: Callable, overrides: tuple, knobs: frozenset,
+               tag: str) -> Callable:
+        """Memoized wrapper binding the tile kwargs `base` accepts.  Knobs the
+        path does not take (e.g. tile_m on a fused kernel that chunks the
+        signature axis internally) are dropped, so one tuned entry can drive
+        both the count and fused dispatchers."""
+        kw = {n: v for n, v in overrides if n in knobs}
+        if not kw:
+            return base
+        key = (tag, self, base, tuple(sorted(kw.items())))
+        fn = _TILED_FN_CACHE.get(key)
+        if fn is None:
+            if tag == "fused":
+                def fn(data, queries, k, _base=base, _kw=kw):
+                    return _base(data, queries, k, **_kw)
+            else:
+                def fn(data, queries, _base=base, _kw=kw):
+                    return _base(data, queries, **_kw)
+            _TILED_FN_CACHE[key] = fn
+        return fn
+
     # -- dispatch -----------------------------------------------------------
     def match_fn(
         self,
         use_kernel: bool,
         signature_layout: SignatureLayout | str = SignatureLayout.WIDE,
+        tile_overrides: tuple = (),
     ) -> Callable[[jnp.ndarray, Any], jnp.ndarray]:
         """The canonical match callable for this engine (kernel or reference),
-        operating on arrays in the given signature layout."""
-        if self.require_layout(signature_layout) is SignatureLayout.PACKED:
-            return self.packed_kernel if use_kernel else self.packed_reference
-        return self.kernel if use_kernel else self.reference
+        operating on arrays in the given signature layout.  `tile_overrides`
+        (canonical ``((knob, value), ...)`` pairs, see
+        `canonical_tile_overrides`) bind kernel tile kwargs; the returned
+        callable is memoized per override set so equal plans share one
+        identity (the executable cache keys on it)."""
+        layout = self.require_layout(signature_layout)
+        if layout is SignatureLayout.PACKED:
+            base = self.packed_kernel if use_kernel else self.packed_reference
+        else:
+            base = self.kernel if use_kernel else self.reference
+        if not tile_overrides or not use_kernel:
+            return base
+        return self._tiled(base, tile_overrides,
+                           self.tile_knobs(use_kernel, layout), "match")
+
+    def fused_topk_fn(
+        self,
+        tile_overrides: tuple = (),
+    ) -> Optional[Callable[[jnp.ndarray, Any, int], tuple]]:
+        """The fused packed match->count->local-top-k callable with tile
+        overrides bound (same memoisation contract as match_fn)."""
+        if self.packed_fused_topk is None or not tile_overrides:
+            return self.packed_fused_topk
+        return self._tiled(self.packed_fused_topk, tile_overrides,
+                           self.packed_fused_tile_knobs, "fused")
 
     def prepare_queries_for(
         self, queries: Any,
@@ -219,65 +329,65 @@ def resolve_match_fn(engine, use_kernel: bool = False,
 # Built-in engines (paper sections IV-V)
 # ---------------------------------------------------------------------------
 
-def _kernel_eq(data, queries):
+def _kernel_eq(data, queries, **tiles):
     from repro.kernels import ops as kops
 
-    return kops.match_count(data, queries)
+    return kops.match_count(data, queries, **tiles)
 
 
-def _kernel_range(data, queries):
+def _kernel_range(data, queries, **tiles):
     from repro.kernels import ops as kops
 
     lo, hi = queries
-    return kops.range_count(data, lo, hi)
+    return kops.range_count(data, lo, hi, **tiles)
 
 
-def _kernel_minsum(data, queries):
+def _kernel_minsum(data, queries, **tiles):
     from repro.kernels import ops as kops
 
-    return kops.minsum_count(data, queries)
+    return kops.minsum_count(data, queries, **tiles)
 
 
-def _kernel_ip(data, queries):
+def _kernel_ip(data, queries, **tiles):
     from repro.kernels import ops as kops
 
-    return kops.ip_count(data, queries)
+    return kops.ip_count(data, queries, **tiles)
 
 
-def _kernel_tanimoto(data, queries):
+def _kernel_tanimoto(data, queries, **tiles):
     from repro.kernels import ops as kops
 
-    return kops.tanimoto_count(data, queries)
+    return kops.tanimoto_count(data, queries, **tiles)
 
 
-def _kernel_cosine(data, queries):
+def _kernel_cosine(data, queries, **tiles):
     from repro.kernels import ops as kops
 
-    return kops.cosine_count(data, queries)
+    return kops.cosine_count(data, queries, **tiles)
 
 
-def _kernel_packed_cosine(data, queries):
+def _kernel_packed_cosine(data, queries, **tiles):
     from repro.kernels import ops as kops
 
-    return kops.packed_cosine_count(data, queries)
+    return kops.packed_cosine_count(data, queries, **tiles)
 
 
-def _kernel_packed_cosine_topk(data, queries, k):
+def _kernel_packed_cosine_topk(data, queries, k, **tiles):
     from repro.kernels import ops as kops
 
-    return kops.packed_cosine_topk(data, queries, k=k)
+    return kops.packed_cosine_topk(data, queries, k=k, **tiles)
 
 
-def _kernel_packed_tanimoto(data, queries):
+def _kernel_packed_tanimoto(data, queries, **tiles):
     from repro.kernels import ops as kops
 
-    return kops.packed_tanimoto_count(data, queries)
+    return kops.packed_tanimoto_count(data, queries, **tiles)
 
 
-def _kernel_packed_tanimoto_topk(data, queries, k):
+def _kernel_packed_tanimoto_topk(data, queries, k, **tiles):
     from repro.kernels import ops as kops
 
-    return kops.packed_tanimoto_topk(data, queries, k=k)
+    return kops.packed_tanimoto_topk(data, queries, k=k, **tiles)
 
 
 def _sign_quantize(x) -> jnp.ndarray:
@@ -298,6 +408,7 @@ register(MatchModel(
     pad_value=-1,                                          # never equals a sig
     example=lambda rng, n, q: (rng.integers(0, 8, (n, 16)).astype(np.int32),
                                rng.integers(0, 8, (q, 16)).astype(np.int32), None),
+    kernel_tile_knobs=frozenset({"tile_q", "tile_n"}),
 ))
 
 register(MatchModel(
@@ -315,6 +426,7 @@ register(MatchModel(
         rng.integers(0, 10, (n, 6)).astype(np.int32),
         (lambda lo: (lo, lo + 3))(rng.integers(0, 6, (q, 6)).astype(np.int32)),
         None),
+    kernel_tile_knobs=frozenset({"tile_q", "tile_n"}),
 ))
 
 register(MatchModel(
@@ -329,6 +441,7 @@ register(MatchModel(
     pad_value=-1,                                          # min(-1, q) sums < 0
     example=lambda rng, n, q: (rng.integers(0, 4, (n, 24)).astype(np.int32),
                                rng.integers(0, 4, (q, 24)).astype(np.int32), 96),
+    kernel_tile_knobs=frozenset({"tile_q", "tile_n", "tile_v"}),
 ))
 
 register(MatchModel(
@@ -343,6 +456,7 @@ register(MatchModel(
     pad_value=0,                                           # zero dot product
     example=lambda rng, n, q: (rng.integers(0, 2, (n, 32)).astype(np.int32),
                                rng.integers(0, 2, (q, 32)).astype(np.int32), 32),
+    kernel_tile_knobs=frozenset({"tile_q", "tile_n", "tile_v"}),
 ))
 
 register(MatchModel(
@@ -365,6 +479,10 @@ register(MatchModel(
     packed_fused_topk=_kernel_packed_tanimoto_topk,
     packed_pad_value=_packing.PACKED_BUCKET_PAD_DATA,      # never collides
     packed_bytes=_packing.packed_bytes_tanimoto,
+    kernel_tile_knobs=frozenset({"tile_q", "tile_n", "tile_m"}),
+    packed_tile_knobs=frozenset({"tile_q", "tile_n", "tile_m"}),
+    # the fused kernel chunks the signature axis in VMEM itself: no tile_m
+    packed_fused_tile_knobs=frozenset({"tile_q", "tile_n"}),
 ))
 
 register(MatchModel(
@@ -388,4 +506,8 @@ register(MatchModel(
     packed_fused_topk=_kernel_packed_cosine_topk,
     packed_pad_value=0,                                    # all-zero words; id-masked
     packed_bytes=_packing.packed_bytes_cosine,
+    kernel_tile_knobs=frozenset({"tile_q", "tile_n", "tile_v"}),
+    # packed words chunk the bit axis in VMEM: only the [Q, N] tiles tune
+    packed_tile_knobs=frozenset({"tile_q", "tile_n"}),
+    packed_fused_tile_knobs=frozenset({"tile_q", "tile_n"}),
 ))

@@ -148,18 +148,22 @@ class GenieIndex:
                                        self.signature_layout)
 
     def search(self, queries, k: int, method: TopKMethod = TopKMethod.CPQ,
-               candidate_cap: int | None = None) -> TopKResult:
+               candidate_cap: int | None = None,
+               tile_overrides=None, autotune=None) -> TopKResult:
         plan = _plan.plan_search(
             self.engine, k, self.max_count, layout=_plan.Layout.MONOLITHIC,
             part_rows=(self.stats.n_objects,), method=method,
             candidate_cap=candidate_cap, use_kernel=self.use_kernel,
             signature_layout=self.signature_layout,
+            tile_overrides=tile_overrides, autotune=autotune,
+            tune_width=int(self.data.shape[1]),
         )
         return _plan.execute(plan, self.data, self.prepare_queries(queries))
 
     def search_multiload(self, queries, k: int, n_parts: int,
                          method: TopKMethod = TopKMethod.CPQ,
-                         candidate_cap: int | None = None) -> TopKResult:
+                         candidate_cap: int | None = None,
+                         tile_overrides=None, autotune=None) -> TopKResult:
         """Paper section III-D: split this index into parts and stream them.
 
         Works for every registered engine: the planned layout pads parts with
@@ -171,6 +175,8 @@ class GenieIndex:
             n_parts=n_parts, n_objects=self.stats.n_objects, method=method,
             candidate_cap=candidate_cap, use_kernel=self.use_kernel,
             signature_layout=self.signature_layout,
+            tile_overrides=tile_overrides, autotune=autotune,
+            tune_width=int(self.data.shape[1]),
         )
         chunks = _plan.pad_and_stack(plan, self.data)
         return _plan.execute(plan, chunks, self.prepare_queries(queries))

@@ -117,6 +117,11 @@ class QueryPlan:
     routing: Routing = Routing.NONE
     # probe width for ROUTED/ROUTED_VERIFIED; None = Router's sqrt(S) default
     nprobe: Optional[int] = None
+    # tuned kernel tile sizes as canonical sorted ((knob, value), ...) pairs
+    # (core/autotune.py; engines.canonical_tile_overrides).  Part of the plan
+    # hash: tuned and default executables never collide in cache, and the
+    # memoized tile-bound match callables keep equal plans key-equal.
+    tile_overrides: tuple = ()
 
     # -- derived layout facts ----------------------------------------------
     @property
@@ -174,6 +179,7 @@ class QueryPlan:
             fused_match=self.fused_match is not None,
             routing=self.routing.value,
             nprobe=self.nprobe,
+            tile_overrides=dict(self.tile_overrides),
         )
 
 
@@ -195,6 +201,9 @@ def plan_search(
     signature_layout: SignatureLayout | str = SignatureLayout.WIDE,
     routing: Routing | str = Routing.NONE,
     nprobe: Optional[int] = None,
+    tile_overrides: Optional[Any] = None,
+    autotune: Optional[Any] = None,
+    tune_width: Optional[int] = None,
 ) -> QueryPlan:
     """The single planning entry point: resolve the engine, lay out the
     parts, fix the pad policy and merge strategy, return the QueryPlan.
@@ -221,16 +230,70 @@ def plan_search(
     it requires a part-structured layout: SEGMENTED, MULTILOAD with
     host_loop=True, or DISTRIBUTED -- the single-program scans (MONOLITHIC,
     scanned MULTILOAD) have nothing to skip and reject it here.
+
+    `tile_overrides` binds kernel tile sizes (tile_q/tile_n/tile_v/tile_m --
+    the knobs kernels/ops.py accepts) onto the kernel dispatch path; it is
+    rejected for use_kernel=False plans and raw callables.  `autotune`
+    consults a measured-knob cache (core/autotune.py: True for the default
+    cache, a path, or an AutotuneCache) and fills tile_overrides /
+    candidate_cap / nprobe / fused-match preference for whatever the caller
+    left unset -- explicit arguments always win, and a cache miss (including
+    a hardware-fingerprint mismatch) silently keeps the defaults.
+    `tune_width` is the physical signature width hint for cache bucketing.
     """
     sig_layout = SignatureLayout(signature_layout)
     model: Optional[_engines.MatchModel] = None
+    match: Any = None
     if callable(engine) and not isinstance(engine, (_engines.MatchModel, Engine, str)):
         # raw callables own the layout contract; the plan just records it
         match = engine
     else:
         model = _engines.get(engine)
         sig_layout = model.require_layout(sig_layout)
-        match = model.match_fn(use_kernel, sig_layout)
+
+    tiles = _engines.canonical_tile_overrides(tile_overrides)
+    tuned_fused: Optional[bool] = None
+    if autotune is not None and autotune is not False and model is not None:
+        # lazy import: the autotuner times candidate plans through this very
+        # module, so a top-level import would be circular
+        from repro.core import autotune as _autotune
+
+        n_hint = n_objects
+        if n_hint is None and part_rows is not None:
+            n_hint = sum(int(r) for r in part_rows)
+        entry = _autotune.consult(
+            autotune, engine=model.engine, signature_layout=sig_layout,
+            n=n_hint, width=tune_width,
+        )
+        if entry is not None:
+            # tuned knobs fill only what the caller left unset: explicit
+            # arguments always win over the cache.  Tile sizes and the fused
+            # preference are kernel-path knobs; candidate_cap and nprobe
+            # shape selection on every dispatch path (incl. use_kernel=False
+            # plans like the dry-run's lowered XLA fallback).
+            if use_kernel:
+                if not tiles and entry.tile_overrides:
+                    tiles = _engines.canonical_tile_overrides(
+                        entry.tile_overrides)
+                tuned_fused = entry.fused_match
+            if candidate_cap is None and entry.candidate_cap is not None:
+                candidate_cap = int(entry.candidate_cap)
+            if (nprobe is None and entry.nprobe is not None
+                    and Routing(routing) is not Routing.NONE):
+                nprobe = int(entry.nprobe)
+    if tiles:
+        if model is None:
+            raise ValueError(
+                "tile_overrides require a registered engine; a raw match "
+                "callable owns its own tiling"
+            )
+        if not use_kernel:
+            raise ValueError(
+                "tile_overrides only apply to kernel dispatch; "
+                "use_kernel=False plans take none"
+            )
+    if model is not None:
+        match = model.match_fn(use_kernel, sig_layout, tiles)
 
     layout = Layout(layout)
     if part_rows is None and n_parts is not None:
@@ -290,8 +353,9 @@ def plan_search(
     fused_topk = None
     if (model is not None and sig_layout is SignatureLayout.PACKED
             and use_kernel and n_objects is None
-            and layout in (Layout.MONOLITHIC, Layout.SEGMENTED)):
-        fused_topk = model.packed_fused_topk
+            and layout in (Layout.MONOLITHIC, Layout.SEGMENTED)
+            and tuned_fused is not False):
+        fused_topk = model.fused_topk_fn(tiles)
     return QueryPlan(
         match=match, params=params, layout=layout, part_rows=rows,
         n_objects=n_objects, engine=model.engine if model else None,
@@ -300,7 +364,7 @@ def plan_search(
         host_loop=host_looped,
         hierarchical=bool(hierarchical), mesh_axes=tuple(mesh_axes),
         signature_layout=sig_layout, fused_match=fused_topk,
-        routing=routing, nprobe=nprobe,
+        routing=routing, nprobe=nprobe, tile_overrides=tiles,
     )
 
 

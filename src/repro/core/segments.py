@@ -191,23 +191,51 @@ class SegmentedIndex:
     # ------------------------------------------------------------------
     # Search: per-segment match + select, exact cap-buffer merge
     # ------------------------------------------------------------------
+    def _tune_width(self) -> int:
+        """Physical stored width (words/bytes when PACKED) for cache lookup."""
+        return int(self.segments[0].data.shape[1])
+
     def search(self, queries, k: int, method: TopKMethod = TopKMethod.CPQ,
                candidate_cap: int | None = None,
                routing: _routing.Routing | str = _routing.Routing.NONE,
                nprobe: int | None = None,
-               router: _routing.Router | None = None) -> TopKResult:
+               router: _routing.Router | None = None,
+               tile_overrides=None, autotune=None) -> TopKResult:
         """`router` lets a caller that caches the Router across searches
         (serve/retrieval.py keys it on the corpus fingerprint) skip the
-        per-search rebuild; ignored when routing is NONE."""
+        per-search rebuild; ignored when routing is NONE.
+
+        `autotune` consults the measured-knob cache (core/autotune.py); when
+        the tuned entry prefers the MULTILOAD host loop over the SEGMENTED
+        merge for this shape, the search delegates there -- both layouts
+        stream the same per-part arrays and merge bit-for-bit identically,
+        so the switch is pure orchestration cost.
+        """
         if not self.segments:
             raise ValueError("empty SegmentedIndex: add() first")
         routing = _routing.Routing(routing)
+        if autotune is not None and autotune is not False:
+            from repro.core import autotune as _autotune
+
+            entry = _autotune.consult(
+                autotune, engine=self.engine,
+                signature_layout=self.signature_layout,
+                n=self.n_objects, width=self._tune_width(),
+            )
+            if entry is not None and entry.layout == "multiload_host":
+                return self.search_multiload(
+                    queries, k, method=method, candidate_cap=candidate_cap,
+                    routing=routing, nprobe=nprobe, router=router,
+                    tile_overrides=tile_overrides, autotune=autotune,
+                )
         plan = _plan.plan_search(
             self.engine, k, self.max_count, layout=_plan.Layout.SEGMENTED,
             part_rows=tuple(self.segment_rows), method=method,
             candidate_cap=candidate_cap, use_kernel=self.use_kernel,
             signature_layout=self.signature_layout,
             routing=routing, nprobe=nprobe,
+            tile_overrides=tile_overrides, autotune=autotune,
+            tune_width=self._tune_width(),
         )
         return self._routed_execute(plan, queries, routing, router=router)
 
@@ -216,7 +244,8 @@ class SegmentedIndex:
                          candidate_cap: int | None = None,
                          routing: _routing.Routing | str = _routing.Routing.NONE,
                          nprobe: int | None = None,
-                         router: _routing.Router | None = None) -> TopKResult:
+                         router: _routing.Router | None = None,
+                         tile_overrides=None, autotune=None) -> TopKResult:
         """Stream the segments through the device one at a time (paper
         section III-D's host loop) -- segments of heterogeneous sizes are the
         parts, so nothing is re-concatenated or re-padded."""
@@ -230,6 +259,8 @@ class SegmentedIndex:
             use_kernel=self.use_kernel, host_loop=True,
             signature_layout=self.signature_layout,
             routing=routing, nprobe=nprobe,
+            tile_overrides=tile_overrides, autotune=autotune,
+            tune_width=self._tune_width(),
         )
         return self._routed_execute(plan, queries, routing, router=router)
 

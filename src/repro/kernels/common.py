@@ -38,9 +38,26 @@ def ceil_to(size: int, multiple: int) -> int:
     return -(-size // multiple) * multiple
 
 
-def pick_tile(size: int, preferred: int, align: int) -> int:
+def pick_tile(size: int, preferred: int, align: int, knob: str = "tile") -> int:
     """Tile size: `preferred` when the dim is big enough, else the whole
-    (alignment-padded) dim."""
+    (alignment-padded) dim.
+
+    `preferred` may come from a tuned plan (core/autotune.py), so a bad value
+    fails loudly with the caller's knob name instead of emitting a degenerate
+    grid: alignment must be positive and `preferred` must reach the alignment
+    floor (the TPU min-tile lane/sublane width the kernels assume)."""
+    align = int(align)
+    preferred = int(preferred)
+    if align <= 0:
+        raise ValueError(
+            f"{knob}: tile alignment must be > 0, got align={align}"
+        )
+    if preferred < align:
+        raise ValueError(
+            f"{knob}={preferred} is below the alignment floor {align}: a "
+            f"sub-aligned tile would emit a degenerate grid; tuned tiles "
+            f"must be multiples of the min-tile width (>= {align})"
+        )
     if size >= preferred:
         return preferred
     return ceil_to(max(size, 1), align)

@@ -29,8 +29,8 @@ _PAD_QUERY = -2
 
 
 def _tiles(q: int, n: int, tq_pref: int, tn_pref: int) -> tuple[int, int]:
-    tq = common.pick_tile(q, tq_pref, 8)
-    tn = common.pick_tile(n, tn_pref, 128)
+    tq = common.pick_tile(q, tq_pref, 8, knob="tile_q")
+    tn = common.pick_tile(n, tn_pref, 128, knob="tile_n")
     return tq, tn
 
 
@@ -94,7 +94,7 @@ def minsum_count(
     qn, v = query_cnt.shape
     nn = data_cnt.shape[0]
     tq, tn = _tiles(qn, nn, tile_q or _ms.TILE_Q, tile_n or _ms.TILE_N)
-    tv = common.pick_tile(v, tile_v or _ms.TILE_V, 128)
+    tv = common.pick_tile(v, tile_v or _ms.TILE_V, 128, knob="tile_v")
     q = common.pad_to(common.pad_to(query_cnt.astype(jnp.int32), tq, 0, 0), tv, 1, 0)
     d = common.pad_to(common.pad_to(data_cnt.astype(jnp.int32), tn, 0, 0), tv, 1, 0)
     out = _ms.minsum_count_pallas(
@@ -118,7 +118,7 @@ def ip_count(
     qn, v = query_bin.shape
     nn = data_bin.shape[0]
     tq, tn = _tiles(qn, nn, tile_q or _ip.TILE_Q, tile_n or _ip.TILE_N)
-    tv = common.pick_tile(v, tile_v or _ip.TILE_V, 128)
+    tv = common.pick_tile(v, tile_v or _ip.TILE_V, 128, knob="tile_v")
     q = common.pad_to(common.pad_to(query_bin.astype(jnp.float32), tq, 0, 0), tv, 1, 0)
     d = common.pad_to(common.pad_to(data_bin.astype(jnp.float32), tn, 0, 0), tv, 1, 0)
     out = _ip.ip_count_pallas(
@@ -141,7 +141,7 @@ def tanimoto_count(
     qn, m = query_sigs.shape
     nn = data_sigs.shape[0]
     tq, tn = _tiles(qn, nn, tile_q or _tc.TILE_Q, tile_n or _tc.TILE_N)
-    tm = common.pick_tile(m, tile_m or _tc.TILE_M, 128)
+    tm = common.pick_tile(m, tile_m or _tc.TILE_M, 128, knob="tile_m")
     # Distinct sentinels on every padded axis: padded signature slots never
     # collide, padded rows/cols are sliced away.
     q = common.pad_to(common.pad_to(query_sigs.astype(jnp.int32), tq, 0, _PAD_QUERY),
@@ -172,7 +172,7 @@ def cosine_count(
     qn, v = query_sgn.shape
     nn = data_sgn.shape[0]
     tq, tn = _tiles(qn, nn, tile_q or _cos.TILE_Q, tile_n or _cos.TILE_N)
-    tv = common.pick_tile(v, tile_v or _cos.TILE_V, 128)
+    tv = common.pick_tile(v, tile_v or _cos.TILE_V, 128, knob="tile_v")
     q = common.pad_to(common.pad_to(query_sgn.astype(jnp.float32), tq, 0, 0), tv, 1, 0)
     d = common.pad_to(common.pad_to(data_sgn.astype(jnp.float32), tn, 0, 0), tv, 1, 0)
     out = _cos.cosine_count_pallas(
@@ -259,7 +259,7 @@ def packed_tanimoto_count(
     qn, m = query_u8.shape
     nn = data_u8.shape[0]
     tq, tn = _tiles(qn, nn, tile_q or _ptan.TILE_Q, tile_n or _ptan.TILE_N)
-    tm = common.pick_tile(m, tile_m or _ptan.TILE_M, 128)
+    tm = common.pick_tile(m, tile_m or _ptan.TILE_M, 128, knob="tile_m")
     q = common.pad_to(common.pad_to(query_u8.astype(jnp.uint8), tq, 0, _PAD_QUERY_U8),
                       tm, 1, _PAD_QUERY_U8)
     d = common.pad_to(common.pad_to(data_u8.astype(jnp.uint8), tn, 0, _PAD_DATA_U8),
@@ -305,8 +305,8 @@ def cpq_hist(
 ) -> jnp.ndarray:
     """c-PQ Gate histogram: int32 [Q, max_count + 1]."""
     qn, nn = counts.shape
-    tq = common.pick_tile(qn, tile_q or _cpq_hist.TILE_Q, 8)
-    tn = common.pick_tile(nn, tile_n or _cpq_hist.TILE_N, 128)
+    tq = common.pick_tile(qn, tile_q or _cpq_hist.TILE_Q, 8, knob="tile_q")
+    tn = common.pick_tile(nn, tile_n or _cpq_hist.TILE_N, 128, knob="tile_n")
     nbins = common.ceil_to(max_count + 1, 128)
     c = common.pad_to(common.pad_to(counts.astype(jnp.int32), tq, 0, -1), tn, 1, -1)
     out = _cpq_hist.cpq_hist_pallas(

@@ -367,6 +367,37 @@ def run_genie_cell(dataset: str, mesh_kind: str) -> dict:
     rep["plan"] = plan.describe()
     rep["routing"] = _report(routed_lowered, routed_compiled, routed_seconds)
     rep["routing"]["plan"] = routed_plan.describe()
+    # tuned-plan pricing (core/autotune.py): when this machine's measured
+    # knob cache holds an entry for the dataset's shape, lower + compile the
+    # tuned variant of the same cell next to the default, so the dry-run
+    # prices exactly what a tuned service would dispatch.  No entry (the
+    # common CI case) -> fingerprint recorded, nothing extra compiled.
+    from repro.core import autotune as autotune_lib
+
+    rep["autotune"] = dict(fingerprint=autotune_lib.hardware_fingerprint(),
+                           entry=None)
+    tune_cache = autotune_lib.resolve_cache(True)
+    entry = (tune_cache.lookup(ds.engine, "wide", n=ds.n_objects)
+             if tune_cache is not None else None)
+    if entry is not None:
+        rep["autotune"]["entry"] = entry.to_dict()
+        t2 = time.perf_counter()
+        with mesh_lib.use_mesh(mesh):
+            tuned_plan = plan_lib.plan_search(
+                ds.engine, params.k, params.max_count,
+                layout=plan_lib.Layout.DISTRIBUTED, n_objects=ds.n_objects,
+                use_kernel=params.use_kernel,
+                hierarchical=(mesh_kind == "multi"
+                              and tuple(mesh.axis_names)[0] == "pod"),
+                mesh_axes=tuple(mesh.axis_names),
+                autotune=tune_cache,
+                tune_width=ds.m if ds.engine != "range" else ds.dim,
+            )
+            tuned_step = plan_lib.executable(tuned_plan, mesh=mesh)
+            tuned_compiled = tuned_step.lower(data_sds, query_sds).compile()
+        tuned_rep = _report(None, tuned_compiled, time.perf_counter() - t2)
+        tuned_rep["plan"] = tuned_plan.describe()
+        rep["autotune"]["tuned"] = tuned_rep
     # Pallas kernel cost model (per device): the deployable TPU path streams
     # the signature matrix once per query batch with VMEM-resident count
     # tiles; the XLA fallback engine recorded above re-reads its [Q, N]

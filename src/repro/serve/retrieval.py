@@ -68,6 +68,14 @@ class RetrievalService:
     # when n_buckets <= 254).  Results are identical to WIDE; only the device
     # footprint and match-phase HBM traffic shrink.
     signature_layout: SignatureLayout | str = SignatureLayout.WIDE
+    # measured-knob cache (core/autotune.py): True = the default per-user
+    # cache file, a path = that file, an AutotuneCache = itself.  Consulted
+    # by every search plan; a miss or a hardware-fingerprint mismatch keeps
+    # today's defaults.  Deliberately NOT part of batch_compat_key: the
+    # front-end coalesces per tenant and a tenant's autotune spec is fixed
+    # for the service's lifetime, so equal keys still share one executable
+    # (docs/SERVING.md).
+    autotune: object = None
 
     def __post_init__(self):
         self.m = self.m_override or tau_ann.required_m(self.eps, self.delta)
@@ -240,7 +248,7 @@ class RetrievalService:
             res = self._index.search(qsigs, k=k, method=method,
                                      candidate_cap=candidate_cap,
                                      routing=routing, nprobe=nprobe,
-                                     router=router)
+                                     router=router, autotune=self.autotune)
         else:
             # sharded serving: the segmented corpus planned across the mesh
             # via the DISTRIBUTED layout, served by the same executor --
@@ -254,6 +262,8 @@ class RetrievalService:
                 mesh_axes=tuple(self.mesh.axis_names),
                 signature_layout=self.signature_layout,
                 routing=routing, nprobe=nprobe,
+                autotune=self.autotune,
+                tune_width=int(data.shape[1]),
             )
             model = engines_lib.get(self._scheme.engine)
             # the router scores canonical WIDE queries; the executor gets
@@ -271,6 +281,55 @@ class RetrievalService:
         # angle inversion for COSINE
         sims = self._scheme.mle(np.asarray(res.counts), self.m)
         return res, sims
+
+    def tune(self, queries, k: int = 10, *,
+             embeddings: Optional[np.ndarray] = None,
+             method: TopKMethod = TopKMethod.CPQ,
+             routing: routing_lib.Routing | str = routing_lib.Routing.NONE,
+             budget: int = 32, repeats: int = 3,
+             cache=None, save: bool = True):
+        """Autotune this service's serving shape against a representative
+        query batch (core/autotune.py) and return the winning TunedEntry.
+
+        Measures the part-structured search the unmeshed path actually runs
+        -- tile sizes, fused preference, candidate_cap, SEGMENTED vs
+        MULTILOAD-host, and (when `routing` is routed) nprobe.  The winner
+        lands in `cache` (defaulting to this service's `autotune` spec; an
+        in-memory cache is created and installed when neither is set), so
+        every later `search` picks the tuned knobs up automatically.
+        """
+        from repro.core import autotune as autotune_lib
+
+        if self._index is None:
+            raise ValueError(
+                "RetrievalService index is empty (no items added yet): "
+                "call add() before tune()"
+            )
+        routing = routing_lib.Routing(routing)
+        emb = self.resolve_queries(queries, embeddings)
+        qsigs = self._hash(emb)
+        model = engines_lib.get(self._scheme.engine)
+        q_wide = model.prepare_queries(qsigs)
+        q_exec = q_wide
+        if SignatureLayout(self.signature_layout) is SignatureLayout.PACKED:
+            q_exec = model.pack_queries(q_wide)
+        stored = jnp.concatenate([s.data for s in self._index.segments], axis=0)
+        resolved = autotune_lib.resolve_cache(
+            cache if cache is not None else self.autotune)
+        if resolved is None:
+            resolved = autotune_lib.AutotuneCache()
+        entry = autotune_lib.tune(
+            model, stored, q_exec, k, self._index.max_count,
+            signature_layout=self.signature_layout, method=method,
+            part_rows=tuple(self._index.segment_rows),
+            router=(self._router()
+                    if routing is not routing_lib.Routing.NONE else None),
+            routing=routing, budget=budget, repeats=repeats,
+            cache=resolved, save=save, prepared=True, route_queries=q_wide,
+        )
+        if self.autotune is None or self.autotune is False:
+            self.autotune = resolved
+        return entry
 
     def items_for(self, result_ids: np.ndarray) -> list:
         """Resolve result ids to the stored items; -1 (empty top-k slots)

@@ -33,6 +33,9 @@ python -m pytest -q -k "not distributed" tests/test_routing.py
 echo "--- serving-frontend parity (coalesced == serial bit-for-bit, 6 engines x routing on/off) ---"
 python -m pytest -q -k "parity_matrix or mixed_tenants" tests/test_frontend.py
 
+echo "--- autotuner contracts (tiled-plan parity, cache fallback, plan keying) ---"
+python -m pytest -q -k "not tune_end_to_end and not service_tune" tests/test_autotune.py
+
 if [[ "${1:-}" == "--fast" ]]; then
     # (tests/test_plan.py's fast, non-subprocess lane already ran above)
     python -m pytest -x -q \
@@ -60,4 +63,12 @@ PYTHONPATH=".:$PYTHONPATH" python benchmarks/roofline.py
 
 echo "--- coarse-routing micro-benchmark (BENCH JSON; parity + <50% scanned at recall >= 0.95) ---"
 PYTHONPATH=".:$PYTHONPATH" python benchmarks/bench_routing.py
+
+# tiny-budget smoke of the measured autotuner: its main() gates on tuned ==
+# default parity, the cache round-trip + fingerprint gate, tuned >= 1.0x on
+# at least one engine, and no engine regressing past the noise floor.  The
+# full-size acceptance run (>= 1.15x on two engines) is benchmarks/run.py.
+echo "--- autotune smoke (BENCH JSON; parity + cache + tuned never regresses) ---"
+PYTHONPATH=".:$PYTHONPATH" python -m benchmarks.bench_autotune \
+    --n 2048 --q 16 --budget 6 --repeats 2 --engines minsum,tanimoto
 echo "CI smoke OK"

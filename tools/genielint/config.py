@@ -65,6 +65,8 @@ class LintConfig:
     # change is still always visible in the description.
     describe_derived: frozenset = frozenset({
         "match",      # resolved from engine x use_kernel x signature_layout
+                      # x tile_overrides (core/autotune.py tuned tiles bind
+                      # memoized callables; overrides surface verbatim)
         "params",     # expanded into the k / method / use_kernel keys
         "pad_value",  # resolved from engine x signature_layout
     })
